@@ -1,0 +1,70 @@
+"""Fig 11: robustness to imbalanced demand — Large-Heavy / Small-Heavy
+(the top/bottom third of models by size receives 80% of requests)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (FAST, Row, cached_library, make_avail,
+                               make_demands, make_requests, scenario)
+from repro.core.allocator import allocate
+from repro.core.baselines import cauchy_allocate, homo_allocate
+from repro.runtime.cluster import ClusterRuntime
+
+
+def _skew(models, heavy: str):
+    # rank by parameter count
+    order = sorted(models, key=lambda m: models[m].params_total)
+    k = max(len(order) // 3, 1)
+    heavy_set = order[-k:] if heavy == "large" else order[:k]
+    n_h, n_l = len(heavy_set), len(order) - len(heavy_set)
+    skew = {}
+    for m in order:
+        skew[m] = (0.8 * len(order) / n_h) if m in heavy_set \
+            else (0.2 * len(order) / max(n_l, 1))
+    return skew
+
+
+def run(extended: bool = False):
+    t0 = time.time()
+    n_epochs = 2 if FAST else 5
+    epoch_s = 360.0
+    rate = 3.0 if FAST else (10.0 if not extended else 25.0)
+    models, configs, regions, wls = scenario(extended)
+    name = "ext" if extended else "core"
+    lib = cached_library(name, models, configs, wls)
+    hlib = cached_library(name, models, configs, wls, homo=True)
+    tag = "extended" if extended else "core"
+
+    for heavy in ("large", "small"):
+        skew = _skew(models, heavy)
+        avail = make_avail(regions, configs, n_epochs,
+                           40 if not extended else 64, seed=4)
+        demands = [make_demands(models, wls, rate, skew)
+                   for _ in range(n_epochs)]
+        reqs = make_requests(models, rate, n_epochs * epoch_s, seed=5,
+                             skew=skew)
+        costs = {}
+        for mname, library, fn in [
+            ("Coral", lib, allocate),
+            ("Homo", hlib, lambda p: homo_allocate(p, hlib)),
+            ("Cauchy", hlib, lambda p: cauchy_allocate(p, hlib)),
+        ]:
+            rt = ClusterRuntime(models, regions, configs, library, fn, wls,
+                                epoch_s=epoch_s)
+            res = rt.run(list(reqs), [dict(a) for a in avail], demands)
+            costs[mname] = res.avg_cost()
+        ch = costs["Coral"]
+        print(f"\n== Fig 11 ({tag}, {heavy}-heavy) ==")
+        for mname, c in costs.items():
+            print(f"{mname:7s} ${c:8.1f}/h")
+        print(f"Coral: {costs['Homo']/ch:.2f}x vs Homo, "
+              f"{costs['Cauchy']/ch:.2f}x vs Cauchy")
+        Row.add(f"fig11_{heavy}_heavy_{tag}", (time.time() - t0) * 1e6,
+                f"vs_homo={costs['Homo']/ch:.2f}x;"
+                f"vs_cauchy={costs['Cauchy']/ch:.2f}x")
+
+
+if __name__ == "__main__":
+    run(False)

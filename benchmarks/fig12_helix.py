@@ -1,0 +1,98 @@
+"""Fig 12: comparison with Helix on its "High GPU-Heterogeneity Cluster"
+(4x A100-40G, 6x V100-16G, 16x L4, 38x T4; llama3-70b; 64 GPUs).
+
+Helix-style: one monolithic PP x DP pipeline over the whole pool.
+Coral: allocates subsets of the same pool as multiple Serving Instances
+via templates + the allocation ILP, under prefill/decode SLOs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, cached_library
+from repro.core.allocator import AllocProblem, Demand, allocate
+from repro.core.baselines import helix_placement
+from repro.core.hardware import DEVICE_TYPES, NodeConfig, Region
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import build_library
+from repro.traces.workloads import workload_stats
+
+# Helix §6.6 pool (single-GPU nodes), AWS us-east-2 prices
+POOL_SPEC = [("A100-40G", 4), ("V100-16G", 6), ("L4", 16), ("T4", 38)]
+HELIX_PREFILL_SLO_MS = 2090.0
+HELIX_DECODE_SLO_MS = 730.0
+
+
+def run():
+    t0 = time.time()
+    model = dataclasses.replace(PAPER_MODELS["llama3-70b"],
+                                prefill_slo_ms=HELIX_PREFILL_SLO_MS,
+                                decode_slo_ms=HELIX_DECODE_SLO_MS)
+    wl = workload_stats(model.trace)
+    configs = [NodeConfig(DEVICE_TYPES[d], 1) for d, _ in POOL_SPEC]
+    region = Region("aws-us-east-2")
+    pool = []
+    avail = {}
+    for (d, n), cfg in zip(POOL_SPEC, configs):
+        pool += [cfg] * n
+        avail[(region.name, cfg.name)] = n
+
+    # --- Helix-style monolithic placement: unconstrained (as Helix runs)
+    # and under the same SLOs Coral must satisfy
+    helix_dec = helix_placement(model, "decode", wl, pool, slo_ms=1e7)
+    helix_dec_slo = helix_placement(model, "decode", wl, pool)
+    helix_cost = sum(region.node_usd_per_hour(c) for c in pool)
+    helix_tput = helix_dec.throughput if helix_dec else 0.0
+    helix_tput_slo = helix_dec_slo.throughput if helix_dec_slo else 0.0
+
+    # --- Coral: allocate from the same pool under demand EXCEEDING the
+    # Helix monolith's (SLO-unconstrained) throughput — the paper's
+    # protocol ("arrival rate exceeding the throughput Helix reports"),
+    # but with SLOs imposed on Coral only.
+    # n_max=8 (vs the default 6): with bf16 weights, no <=6-node subset of
+    # this pool's small GPUs can cover llama3-70b's 80 layers without the
+    # four A100s; 8-node T4/L4 templates restore the multi-instance
+    # decomposition the paper reports (their Fig 12 shows three L4/T4
+    # decode instances).
+    lib = build_library([model], configs, {model.name: wl}, n_max=8,
+                        rho=12.0)
+    rate = 1.1 * helix_tput / wl.avg_output
+    demands = [Demand(model.name, "prefill", rate * wl.avg_prompt),
+               Demand(model.name, "decode", rate * wl.avg_output)]
+    alloc = allocate(AllocProblem([region], configs, avail, demands, lib,
+                                  time_limit=120))
+    coral_tput = alloc.served(model.name, "decode")
+    print("\n== Fig 12: Helix comparison (llama3-70b, 64-GPU fixed pool) ==")
+    print(f"Helix monolithic: decode T={helix_tput:.0f} tok/s "
+          f"S={helix_dec.n_stages if helix_dec else '-'} "
+          f"cost=${helix_cost:.1f}/h (all 64 GPUs, NO latency SLO)")
+    print(f"Helix monolithic under Coral's SLOs: "
+          f"T={helix_tput_slo:.0f} tok/s "
+          f"S={helix_dec_slo.n_stages if helix_dec_slo else '-'}")
+    print(f"Coral @ {rate:.1f} req/s: decode served={coral_tput:.0f} tok/s "
+          f"cost=${alloc.cost_per_hour:.1f}/h "
+          f"nodes={alloc.total_nodes}/64 under SLOs "
+          f"({HELIX_PREFILL_SLO_MS:.0f}/{HELIX_DECODE_SLO_MS:.0f} ms)")
+    for (r, k), n in sorted(alloc.instances.items()):
+        t = alloc.templates[k]
+        print(f"  {k[1]:8s} x{n} {dict(t.counts)} T={t.throughput:.0f} "
+              f"S={t.placement.n_stages}")
+    # cost efficiency under identical SLOs (apples-to-apples)
+    eff_coral = coral_tput / max(alloc.cost_per_hour, 1e-9)
+    eff_helix_slo = helix_tput_slo / helix_cost
+    gain = eff_coral / max(eff_helix_slo, 1e-9)
+    print(f"SLO-constrained cost efficiency (decode tok/s per $/h): "
+          f"Coral {eff_coral:.0f} vs Helix {eff_helix_slo:.0f} "
+          f"({gain:.2f}x): the monolithic pipeline pays cross-stage "
+          f"latency that the per-stage SLO budget cannot absorb")
+    Row.add("fig12_helix", (time.time() - t0) * 1e6,
+            f"slo_cost_eff_gain={gain:.2f}x;coral_tput={coral_tput:.0f};"
+            f"helix_slo_tput={helix_tput_slo:.0f};"
+            f"helix_unconstrained={helix_tput:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig 13: sensitivity of Serving Template generation to the pruning
+parameters (N_max, rho) — template count, solve time, best cost
+efficiency. Testbed: GPT-OSS-120B prefill (as in the paper)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import FAST, Row
+from repro.core.hardware import EXT_CONFIGS, US_EAST_2
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import generate_templates
+from repro.traces.workloads import workload_stats
+
+
+def run():
+    t0 = time.time()
+    model = PAPER_MODELS["gpt-oss-120b"]
+    wl = workload_stats(model.trace)
+    sweep = [(2, 4.0), (3, 6.0), (4, 8.0), (5, 10.0), (6, 12.0)]
+    if FAST:
+        sweep = sweep[:4]
+    print("\n== Fig 13: (N_max, rho) sensitivity — gpt-oss-120b prefill ==")
+    print(f"{'Nmax':>4} {'rho':>5} {'combos':>8} {'templates':>9} "
+          f"{'secs':>7} {'best tok/s/$':>12}")
+    best_effs = []
+    for n_max, rho in sweep:
+        temps, stats = generate_templates(model, "prefill", EXT_CONFIGS, wl,
+                                          n_max=n_max, rho=rho)
+        eff = max((t.throughput / t.cost(US_EAST_2,
+                                         {c.name: c for c in EXT_CONFIGS})
+                   for t in temps), default=0.0)
+        best_effs.append(eff)
+        print(f"{n_max:4d} {rho:5.0f} {stats['combos']:8d} "
+              f"{stats['templates']:9d} {stats['seconds']:7.1f} {eff:12.1f}")
+    plateau = best_effs[-1] / max(best_effs[0], 1e-9)
+    print(f"best-template efficiency plateaus: "
+          f"last/first = {plateau:.3f}")
+    Row.add("fig13_sensitivity", (time.time() - t0) * 1e6,
+            f"plateau_gain={plateau:.3f};"
+            f"best_eff={best_effs[-1]:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Fig 7: hourly serving cost — Coral vs Homo vs Cauchy under default
+(abundant) availability, core + extended setups, with the per-model
+provisioning breakdown (prefill/decode)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (FAST, Row, cached_library, make_avail,
+                               make_demands, make_requests, scenario)
+from repro.core.allocator import allocate
+from repro.core.baselines import cauchy_allocate, homo_allocate
+from repro.runtime.cluster import ClusterRuntime
+
+
+def _run_setup(extended: bool, rate: float, n_epochs: int, epoch_s: float):
+    models, configs, regions, wls = scenario(extended)
+    name = "ext" if extended else "core"
+    lib = cached_library(name, models, configs, wls)
+    hlib = cached_library(name, models, configs, wls, homo=True)
+    abundance = 40 if not extended else 64
+    avail = make_avail(regions, configs, n_epochs, abundance, seed=0)
+    demands = [make_demands(models, wls, rate) for _ in range(n_epochs)]
+    reqs = make_requests(models, rate, n_epochs * epoch_s, seed=1)
+
+    out = {}
+    for mname, library, fn in [
+        ("Coral", lib, allocate),
+        ("Homo", hlib, lambda p: homo_allocate(p, hlib)),
+        ("Cauchy", hlib, lambda p: cauchy_allocate(p, hlib)),
+    ]:
+        rt = ClusterRuntime(models, regions, configs, library, fn, wls,
+                            epoch_s=epoch_s)
+        res = rt.run(list(reqs), [dict(a) for a in avail], demands)
+        cost = res.avg_cost()
+        solve = np.mean([e.solve_seconds for e in res.epochs])
+        # per-model cost breakdown from the final cluster
+        breakdown = {}
+        cfg = library.config_by_name
+        for (rname, key), insts in rt.running.items():
+            region = next(r for r in regions if r.name == rname)
+            for inst in insts:
+                if inst.dead:
+                    continue
+                k = (key[0], key[1])
+                breakdown[k] = breakdown.get(k, 0.0) \
+                    + inst.template.cost(region, cfg)
+        out[mname] = dict(cost=cost, solve=solve, breakdown=breakdown,
+                          res=res)
+    return models, out
+
+
+def run():
+    t0 = time.time()
+    n_epochs = 3 if FAST else 5
+    epoch_s = 360.0
+    for extended, rate in ((False, 10.0 if not FAST else 4.0),
+                           (True, 25.0 if not FAST else 6.0)):
+        models, out = _run_setup(extended, rate, n_epochs, epoch_s)
+        tag = "extended" if extended else "core"
+        print(f"\n== Fig 7 ({tag} setup, rate={rate} req/s/model) ==")
+        for mname, d in out.items():
+            print(f"{mname:7s} ${d['cost']:8.1f}/h  solve={d['solve']:.2f}s")
+        ch = out["Coral"]["cost"]
+        rh = out["Homo"]["cost"] / ch if ch else 0
+        rc = out["Cauchy"]["cost"] / ch if ch else 0
+        print(f"Coral reduction: {rh:.2f}x vs Homo, {rc:.2f}x vs Cauchy")
+        print("per-model breakdown (Coral, $/h):")
+        agg = {}
+        for (m, phase), c in out["Coral"]["breakdown"].items():
+            agg.setdefault(m, {})[phase] = c
+        for m, d in sorted(agg.items()):
+            print(f"  {m:14s} P=${d.get('prefill', 0):7.1f} "
+                  f"D=${d.get('decode', 0):7.1f}")
+        Row.add(f"fig7_cost_{tag}", (time.time() - t0) * 1e6,
+                f"coral=${ch:.1f};vs_homo={rh:.2f}x;vs_cauchy={rc:.2f}x;"
+                f"solve_s={out['Coral']['solve']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,123 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms
+per (arch x shape) cell from the cached dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); on this backend
+the analysis reports the *per-device* partitioned module, so global =
+per_device x n_devices (validated against 6*N*D in tests). collective
+bytes are parsed from the optimized HLO (launch/dryrun.py).
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import ART, Row
+from repro.configs.base import SHAPE_BY_NAME
+from repro.configs.registry import get_config
+from repro.core.hardware import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
+                                 TPU_V5E_PEAK_FLOPS)
+
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N*D inference (N = active params)."""
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def analyse_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    # loop-aware HLO counters (launch/hlo_analysis.py); XLA's raw
+    # cost_analysis undercounts lax.scan bodies by the trip count
+    flops_dev = rec.get("hlo_flops", rec["flops_total"])
+    bytes_dev = rec.get("hlo_traffic_bytes", rec["bytes_accessed"])
+    coll_total = rec.get("hlo_collective_bytes_total",
+                         rec["collective_bytes_total"])
+    t_comp = flops_dev / TPU_V5E_PEAK_FLOPS
+    t_mem = bytes_dev / TPU_V5E_HBM_BW
+    t_coll = coll_total / TPU_V5E_ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (flops_dev * n) if flops_dev > 0 else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model compute per chip over peak, at the
+    # step time implied by the dominant term
+    frac = (mf / n / TPU_V5E_PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return dict(rec, t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+                dominant=dominant, model_flops=mf, useful_ratio=useful,
+                roofline_fraction=frac)
+
+
+def load_all(mesh: str = "16x16", tag: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        cell_tag = rec["cell"].split("__")[3] if rec["cell"].count("__") >= 3 \
+            else ""
+        if cell_tag != tag:
+            continue
+        out.append(rec)
+    return out
+
+
+def run(mesh: str = "16x16"):
+    t0 = time.time()
+    recs = load_all(mesh)
+    print(f"\n== Roofline ({mesh} mesh, per-chip seconds/step) ==")
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9} {'mem(s)':>9} "
+           f"{'coll(s)':>9} {'dom':>5} {'useful':>7} {'roofl%':>7}")
+    print(hdr)
+    rows = []
+    worst = None
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            print(f"{rec['arch']:22s} {rec['shape']:12s} "
+                  f"{'—':>9} {'—':>9} {'—':>9}   skip "
+                  f"({rec['reason'][:40]}...)")
+            continue
+        a = analyse_cell(rec)
+        rows.append(a)
+        print(f"{a['arch']:22s} {a['shape']:12s} {a['t_compute']:9.4f} "
+              f"{a['t_memory']:9.4f} {a['t_collective']:9.4f} "
+              f"{a['dominant'][:4]:>5} {a['useful_ratio']:7.2f} "
+              f"{100*a['roofline_fraction']:7.1f}")
+        if worst is None or a["roofline_fraction"] < worst["roofline_fraction"]:
+            worst = a
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"roofline_{mesh}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    if rows:
+        import numpy as np
+        med = float(np.median([r["roofline_fraction"] for r in rows]))
+        Row.add(f"roofline_{mesh}", (time.time() - t0) * 1e6,
+                f"cells={len(rows)};median_fraction={med:.3f};"
+                f"worst={worst['arch']}/{worst['shape']}="
+                f"{worst['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

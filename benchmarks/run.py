@@ -1,0 +1,52 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV (also written to artifacts/bench_results.csv).
+#
+# Set BENCH_FAST=0 for the full-scale (paper-parameter) runs; the default
+# trims trace durations and the (N_max, rho) caps so the whole suite
+# completes on this 1-core CPU container.
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.common import ART, Row
+    from benchmarks import (fig1_heterogeneity, fig2_joint, fig6_fidelity,
+                            fig7_cost, fig9_scarce, fig11_imbalance,
+                            fig12_helix, fig13_sensitivity, roofline,
+                            table1_specs)
+
+    t0 = time.time()
+    jobs = [
+        ("table1", table1_specs.run),
+        ("fig1", fig1_heterogeneity.run),
+        ("fig2", fig2_joint.run),
+        ("fig6", fig6_fidelity.run),
+        ("fig7", fig7_cost.run),
+        ("fig9_core", lambda: fig9_scarce.run(extended=False)),
+        ("fig9_ext", lambda: fig9_scarce.run(extended=True)),
+        ("fig11_core", lambda: fig11_imbalance.run(extended=False)),
+        ("fig12", fig12_helix.run),
+        ("fig13", fig13_sensitivity.run),
+        ("roofline_single", lambda: roofline.run("16x16")),
+        ("roofline_multi", lambda: roofline.run("2x16x16")),
+    ]
+    failures = []
+    for name, fn in jobs:
+        try:
+            fn()
+        except Exception:                               # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            Row.add(name, 0.0, "FAILED")
+    Row.flush(os.path.join(ART, "bench_results.csv"))
+    print(f"\ntotal benchmark wall time: {time.time() - t0:.0f}s")
+    if failures:
+        print(f"FAILED benchmarks: {failures}")
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

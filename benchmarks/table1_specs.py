@@ -1,0 +1,30 @@
+"""Table 1: GPU specs and perf-per-cost (mem / bandwidth / TFLOPs per
+relative cost unit)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row
+from repro.core.hardware import A10G, A100, H100, L4, L40S
+
+
+def run():
+    t0 = time.time()
+    print("\n== Table 1: perf per cost ==")
+    print(f"{'GPU':6s} {'relcost':>7s} {'mem/GB':>7s} {'bw':>6s} {'TF':>6s}"
+          f" | {'mem/c':>6s} {'bw/c':>6s} {'TF/c':>6s}")
+    for d in (H100, A100, L40S, L4, A10G):
+        c = d.rel_cost
+        print(f"{d.name:6s} {c:7.1f} {d.mem_gb:7.0f} {d.bw_tbps:6.2f} "
+              f"{d.tflops:6.0f} | {d.mem_gb/c:6.1f} {d.bw_tbps/c:6.2f} "
+              f"{d.tflops/c:6.1f}")
+    # paper's qualitative claim: mid-tier beats top-tier on perf-per-cost
+    assert L4.mem_gb / L4.rel_cost > H100.mem_gb / H100.rel_cost
+    assert L40S.tflops / L40S.rel_cost > H100.tflops / H100.rel_cost
+    Row.add("table1_specs", (time.time() - t0) * 1e6,
+            f"L40S_TF_per_cost={L40S.tflops/L40S.rel_cost:.0f};"
+            f"H100_TF_per_cost={H100.tflops/H100.rel_cost:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Adaptive multi-LLM cluster simulation: Coral's epoch loop reacting to
+shifting demand and availability, with a node-failure injection
+(fault-tolerance demo: the allocator re-solve replaces lost capacity).
+
+Run:  PYTHONPATH=src python examples/adaptive_cluster.py
+"""
+from repro.core.allocator import Demand, allocate
+from repro.core.hardware import CORE_REGIONS, make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import build_library
+from repro.runtime.cluster import ClusterRuntime
+from repro.traces.workloads import (default_base_availability,
+                                    gen_availability, gen_requests,
+                                    workload_stats)
+
+models = {m: PAPER_MODELS[m] for m in ("phi4-14b", "gpt-oss-20b")}
+configs = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
+wls = {m: workload_stats(models[m].trace) for m in models}
+lib = build_library(list(models.values()), configs, wls, n_max=3, rho=8.0)
+
+n_epochs, epoch_s = 4, 240.0
+rates = [2.0, 4.0, 6.0, 3.0]                    # shifting demand
+reqs = []
+for i, m in enumerate(models):
+    off = 0
+    for e, r in enumerate(rates):
+        part = gen_requests(m, models[m].trace, r, epoch_s, seed=e * 7 + i,
+                            rid0=i * 10**6 + e * 10**4)
+        for q in part:
+            q.arrival += e * epoch_s
+        reqs += part
+reqs.sort(key=lambda q: q.arrival)
+
+base = default_base_availability(configs, abundance=40)
+avail = gen_availability(CORE_REGIONS, configs, n_epochs, base, seed=1)
+demands = [[Demand(m, "prefill", rates[e] * wls[m].avg_prompt)
+            for m in models]
+           + [Demand(m, "decode", rates[e] * wls[m].avg_output)
+              for m in models]
+           for e in range(n_epochs)]
+
+rt = ClusterRuntime(models, CORE_REGIONS, configs, lib, allocate, wls,
+                    epoch_s=epoch_s)
+res = rt.run(reqs, avail, demands, fail_rate_per_epoch=0.5, seed=0)
+print(f"{'ep':>2} {'$/h':>8} {'inst':>5} {'new':>4} {'drain':>5} "
+      f"{'solve(s)':>8}  goodput/model")
+for e in res.epochs:
+    gp = {m: round(v) for m, v in e.goodput.items()}
+    print(f"{e.epoch:2d} {e.cost_per_hour:8.1f} {e.n_instances:5d} "
+          f"{e.n_new:4d} {e.n_drained:5d} {e.solve_seconds:8.2f}  {gp}")
+print("\nThe epoch-2 demand spike scales the cluster up; the failure "
+      "injections are absorbed by the next re-solve (paper §5.1).")

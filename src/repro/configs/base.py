@@ -1,0 +1,195 @@
+"""Model configuration dataclasses shared by the model zoo, the serving
+cost model, and the launch/dry-run machinery.
+
+Every assigned architecture gets one module ``src/repro/configs/<id>.py``
+exposing ``config()`` (the exact assigned shape) and ``smoke_config()``
+(a reduced same-family shape used by CPU smoke tests). ``registry.py``
+maps ``--arch <id>`` to these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope: str = "rope"               # rope | mrope | none | sinusoidal
+    rope_theta: float = 1e6
+    sliding_window: int = 0          # 0 -> full attention
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # "onehot": GShard-style dispatch via one-hot einsums (reference;
+    #   O(T·E·cap) memory). "sorted": argsort/scatter dispatch, linear in
+    #   tokens — the §Perf beyond-paper optimization (EXPERIMENTS.md).
+    moe_impl: str = "onehot"
+
+    # --- SSM / Mamba2 ---
+    ssm_state: int = 0               # N (state size per head)
+    ssm_head_dim: int = 64           # P (channels per SSM head)
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_conv: int = 4
+    attn_every: int = 0              # hybrid: shared attn block after every k SSM layers
+
+    # --- xLSTM ---
+    slstm_every: int = 0             # sLSTM block at layers where (i+1) % slstm_every == 0
+    mlstm_expand: float = 2.0
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # encoder positions (whisper-base: 1500)
+
+    # --- VLM ---
+    vision_stub: bool = False        # frontend stubbed: input provides patch embeds
+    n_vision_tokens: int = 0
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"          # compute/weight dtype for dry-run
+    param_dtype: str = "float32"     # master weights for training
+    remat: bool = True               # activation checkpointing in train_step
+    weight_sharding: str = "tp"      # tp | fsdp  (fsdp => 2-D ("data","model"))
+    # decode KV layout: shard the sequence dim over "model" when the kv
+    # head count cannot use it (GQA kv < TP) — attention reductions over
+    # the sharded seq become scalar psums (§Perf C3)
+    kv_seq_shard: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def mlstm_d_inner(self) -> int:
+        return int(self.mlstm_expand * self.d_model)
+
+    @property
+    def is_recurrent(self) -> bool:
+        """True if decode state is O(1) in context length (no full KV)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def supports_long_context(self) -> bool:
+        """sub-quadratic decode => long_500k cell runs."""
+        return self.is_recurrent
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are (or contain) decoders
+
+    # --- parameter counting (used by cost model + roofline MODEL_FLOPS) ---
+    def param_count(self, active_only: bool = False) -> int:
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "vlm", "audio", "moe"):
+            attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+                + (self.n_heads * hd) * d
+            if self.family == "moe":
+                n_e = self.top_k if active_only else self.n_experts
+                ffn = n_e * 3 * d * self.d_ff + d * self.n_experts  # router
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = attn + ffn + 2 * d
+            total = emb + L * per_layer
+            if self.is_encoder_decoder:
+                enc = self.n_enc_layers * (attn + 3 * d * self.d_ff + 2 * d)
+                cross = L * attn          # cross-attention in decoder
+                total += enc + cross
+            return total
+        if self.family == "hybrid":
+            di, N = self.d_inner, self.ssm_state
+            H = self.ssm_nheads
+            mamba = d * 2 * di + di * self.ssm_conv + di * 2 * N \
+                + 2 * H + di + di * d + d * di  # in/out/gate projections approx
+            shared_attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+                + (self.n_heads * hd) * d + d * self.d_ff * 3
+            n_attn = L // max(self.attn_every, 1) if self.attn_every else 0
+            return emb + L * (mamba + 2 * d) + (shared_attn if n_attn else 0)
+        if self.family == "ssm":  # xLSTM
+            di = self.mlstm_d_inner
+            mlstm = d * 2 * di + 3 * di * di // max(self.n_heads, 1) + di * d + 4 * di
+            slstm = 4 * d * d + 4 * d
+            n_s = L // self.slstm_every if self.slstm_every else 0
+            return emb + (L - n_s) * mlstm + n_s * slstm + L * 2 * d
+        raise ValueError(self.family)
+
+    def kv_bytes_per_token(self, bytes_per_el: int = 2) -> int:
+        """KV-cache bytes appended per generated token (0 for recurrent)."""
+        if self.is_recurrent:
+            n_attn = (self.n_layers // max(self.attn_every, 1)
+                      if self.attn_every else 0)
+        else:
+            n_attn = self.n_layers
+        return n_attn * 2 * self.n_kv_heads * self.resolved_head_dim * bytes_per_el
+
+    def decode_state_bytes(self, bytes_per_el: int = 2) -> int:
+        """O(1) recurrent state bytes per sequence (SSM/xLSTM)."""
+        if self.family == "hybrid":
+            per_layer = self.ssm_nheads * self.ssm_head_dim * self.ssm_state \
+                + self.d_inner * (self.ssm_conv - 1)
+            return self.n_layers * per_layer * bytes_per_el
+        if self.family == "ssm":
+            dh = self.mlstm_d_inner // self.n_heads
+            per_m = self.n_heads * dh * dh + self.n_heads * dh
+            return self.n_layers * per_m * bytes_per_el
+        return 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+# ----------------------------------------------------------------------
+# Input shapes assigned to the LM family (identical for all 10 archs).
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether an (arch x shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("skipped: pure full-attention arch — O(seq^2) attention and "
+                       f"{shape.seq_len}-token KV are quadratic; see DESIGN.md §4")
+    return True, ""

@@ -1,0 +1,47 @@
+"""--arch <id> registry over the 10 assigned architectures."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, SHAPE_BY_NAME, cell_is_runnable
+
+_ARCH_MODULES: Dict[str, str] = {
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "whisper-base": "repro.configs.whisper_base",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()
+
+
+def all_cells():
+    """Yield (arch_id, shape, runnable, skip_reason) for all 40 cells."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_is_runnable(cfg, shape)
+            yield arch, shape, ok, why
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "all_cells",
+           "SHAPES", "SHAPE_BY_NAME"]

@@ -1,0 +1,179 @@
+"""Online resource allocation ILP (paper §4.3).
+
+Decision vars: integer v_r(tau) = #Serving Instances of template tau in
+region r; continuous I_r(tau) >= (v - v')·p_r(tau)·K models the
+initialization penalty charged only on newly added instances.
+Constraints: per-(region, config) availability; per-(model, phase)
+throughput demand. Objective: provisioning cost + init penalty
+(+ big-M shortfall slack so scarce-availability instances always return
+a best-effort allocation instead of INFEASIBLE — mirroring §6.4 where
+methods are compared by how much demand they actually satisfy).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import NodeConfig, Region
+from repro.core.templates import ServingTemplate, TemplateLibrary
+from repro.solver.milp import MilpModel
+
+
+@dataclass(frozen=True)
+class Demand:
+    model: str
+    phase: str
+    tokens_per_s: float
+
+
+@dataclass
+class AllocProblem:
+    regions: Sequence[Region]
+    configs: Sequence[NodeConfig]
+    availability: Dict[Tuple[str, str], int]      # (region, config) -> nodes
+    demands: Sequence[Demand]
+    library: TemplateLibrary
+    current: Dict[Tuple[str, Tuple], int] = field(default_factory=dict)
+    init_penalty_k: float = 0.1                    # K (init time / interval)
+    time_limit: float = 60.0
+    max_templates_per_demand: int = 1200           # solver-scaling knob
+
+
+@dataclass
+class Allocation:
+    instances: Dict[Tuple[str, Tuple], int]        # (region, template.key) -> n
+    templates: Dict[Tuple, ServingTemplate]        # template.key -> template
+    cost_per_hour: float
+    init_penalty: float
+    unmet: Dict[Tuple[str, str], float]            # (model, phase) -> tok/s
+    solve_seconds: float
+    n_vars: int
+    ok: bool
+
+    @property
+    def total_nodes(self) -> int:
+        return sum(self.templates[k].n_nodes * n
+                   for (_, k), n in self.instances.items())
+
+    def served(self, model: str, phase: str) -> float:
+        return sum(self.templates[k].throughput * n
+                   for (_, k), n in self.instances.items()
+                   if k[0] == model and k[1] == phase)
+
+
+def allocate(p: AllocProblem) -> Allocation:
+    t0 = time.time()
+    cfg_by_name = p.library.config_by_name
+    mdl = MilpModel()
+
+    v_vars: Dict[Tuple[str, Tuple], int] = {}
+    i_vars: Dict[Tuple[str, Tuple], int] = {}
+    tmpl_by_key: Dict[Tuple, ServingTemplate] = {}
+    avail_rows: Dict[Tuple[str, str], Dict[int, float]] = {}
+    demand_rows: Dict[Tuple[str, str], Dict[int, float]] = {}
+    shortfall_pen: Dict[Tuple[str, str], float] = {}
+
+    for dem in p.demands:
+        temps = p.library.get(dem.model, dem.phase)
+        if not temps:
+            continue
+        # var-count cap: keep the 2-D (cost, throughput) Pareto frontier
+        # first — the solver needs cheap low-throughput templates to match
+        # demand tightly, not just the best $/tok/s — then fill by
+        # cost-efficiency.
+        if len(temps) > p.max_templates_per_demand:
+            def mincost(t):
+                return min(t.cost(r, cfg_by_name) for r in p.regions)
+
+            by_cost = sorted(temps, key=lambda t: (mincost(t),
+                                                   -t.throughput))
+            frontier, best_t = [], -1.0
+            for t in by_cost:
+                if t.throughput > best_t:
+                    frontier.append(t)
+                    best_t = t.throughput
+            chosen = dict.fromkeys(frontier[:p.max_templates_per_demand])
+            if len(chosen) < p.max_templates_per_demand:
+                def eff(t):
+                    return mincost(t) / max(t.throughput, 1e-9)
+                for t in sorted(temps, key=eff):
+                    if len(chosen) >= p.max_templates_per_demand:
+                        break
+                    chosen.setdefault(t)
+            temps = list(chosen)
+        dkey = (dem.model, dem.phase)
+        demand_rows[dkey] = {}
+        # shortfall penalty: ~100x the worst $/tok/s so meeting demand wins
+        worst = max(t.cost(r, cfg_by_name) / max(t.throughput, 1e-9)
+                    for t in temps for r in p.regions)
+        shortfall_pen[dkey] = 100.0 * worst
+
+        for region in p.regions:
+            for t in temps:
+                usage = t.usage()
+                ub = min((p.availability.get((region.name, c), 0) // n
+                          for c, n in usage.items() if n > 0), default=0)
+                ub = min(ub, int(np.ceil(dem.tokens_per_s
+                                         / max(t.throughput, 1e-9))) + 1)
+                if ub <= 0:
+                    continue
+                price = t.cost(region, cfg_by_name)
+                key = (region.name, t.key)
+                v = mdl.add_var(obj=price, ub=ub, integer=True)
+                v_vars[key] = v
+                tmpl_by_key[t.key] = t
+                # init penalty: I >= (v - v_cur) * price * K
+                cur = p.current.get(key, 0)
+                iv = mdl.add_var(obj=1.0, lb=0.0)
+                i_vars[key] = iv
+                mdl.add_constr({v: price * p.init_penalty_k, iv: -1.0},
+                               ub=price * p.init_penalty_k * cur)
+                for c, n in usage.items():
+                    avail_rows.setdefault((region.name, c), {})[v] = float(n)
+                demand_rows[dkey][v] = demand_rows[dkey].get(v, 0.0) \
+                    + float(t.throughput)
+
+    # availability constraints
+    for (rname, cname), coeffs in avail_rows.items():
+        mdl.add_constr(coeffs, ub=float(p.availability.get((rname, cname), 0)))
+    # demand constraints with a *coupled per-model* shortfall fraction
+    # s_m in [0,1] (the paper has a single T_m per model, §3: a request
+    # not prefilled is never decoded, so phase shortfalls move together)
+    model_slack = {}
+    for dem in p.demands:
+        m = dem.model
+        if m not in model_slack:
+            pen = sum(shortfall_pen.get((d.model, d.phase), 1e5)
+                      * d.tokens_per_s for d in p.demands if d.model == m)
+            model_slack[m] = mdl.add_var(obj=pen, lb=0.0, ub=1.0)
+        coeffs = dict(demand_rows.get((m, dem.phase), {}))
+        coeffs[model_slack[m]] = dem.tokens_per_s
+        mdl.add_constr(coeffs, lb=dem.tokens_per_s)
+
+    res = mdl.solve(time_limit=p.time_limit, gap=1e-4)
+    if not res.ok:
+        return Allocation({}, {}, np.inf, 0.0,
+                          {(d.model, d.phase): d.tokens_per_s
+                           for d in p.demands},
+                          time.time() - t0, mdl.n, False)
+
+    instances = {}
+    cost = init_pen = 0.0
+    for key, v in v_vars.items():
+        n = int(round(res.x[v]))
+        if n > 0:
+            instances[key] = n
+            t = tmpl_by_key[key[1]]
+            region = next(r for r in p.regions if r.name == key[0])
+            cost += n * t.cost(region, cfg_by_name)
+            init_pen += res.x[i_vars[key]]
+    unmet = {}
+    for dem in p.demands:
+        s = res.x[model_slack[dem.model]]
+        if s > 1e-6:
+            unmet[(dem.model, dem.phase)] = float(s * dem.tokens_per_s)
+    return Allocation(instances, tmpl_by_key, cost, init_pen, unmet,
+                      time.time() - t0, mdl.n, True)

@@ -1,0 +1,250 @@
+"""Baselines from the paper's evaluation (§6.1, §6.6).
+
+* Homo — SkyServe/SageServe-style: each replica on homogeneous hardware
+  (heterogeneity only across replicas); greedily instantiates the most
+  cost-efficient (throughput per USD) homogeneous template per model, in
+  isolation, consuming availability in sequence.
+* Cauchy — per-model ILP over homogeneous-per-replica templates with
+  phase-specific GPU combos (prefill and decode pools may differ; a
+  prefill replica may feed multiple decode replicas), cost-efficiency in
+  the objective, still no cross-model coordination.
+* Helix-style — single-model monolithic placement over a *fixed* node
+  pool: all nodes in one PP x DP pipeline, stages grouped by device type
+  (an approximation of Helix's max-flow placement; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.allocator import Allocation, AllocProblem, Demand
+from repro.core.hardware import NodeConfig, Region
+from repro.core.modelspec import ServedModel
+from repro.core.placement import Placement, optimal_placement_exact
+from repro.core.profiles import ProfileTable, WorkloadStats
+from repro.core.templates import (ServingTemplate, TemplateLibrary,
+                                  generate_templates)
+from repro.solver.milp import MilpModel
+
+
+def homo_library(models: Sequence[ServedModel], configs: Sequence[NodeConfig],
+                 workloads: Dict[str, WorkloadStats], n_max: int = 6,
+                 rho: float = 12.0) -> TemplateLibrary:
+    """Template library restricted to single-config-type combinations."""
+    lib = TemplateLibrary(config_by_name={c.name: c for c in configs})
+    for m in models:
+        wl = workloads[m.name]
+        for phase in ("prefill", "decode"):
+            temps: List[ServingTemplate] = []
+            for c in configs:
+                t, _ = generate_templates(m, phase, [c], wl, n_max=n_max,
+                                          rho=rho, prune=True)
+                temps.extend(t)
+            lib.add((m.name, phase), temps, {"homo": True})
+    return lib
+
+
+def _consume(avail: Dict, region: str, t: ServingTemplate, n: int):
+    for c, k in t.counts:
+        avail[(region, c)] -= k * n
+
+
+def _max_instances(avail: Dict, region: str, t: ServingTemplate) -> int:
+    return min((avail.get((region, c), 0) // k for c, k in t.counts
+                if k > 0), default=0)
+
+
+def homo_allocate(p: AllocProblem, lib: TemplateLibrary) -> Allocation:
+    """Greedy per-model best cost-efficiency homogeneous allocation."""
+    avail = dict(p.availability)
+    cfg = lib.config_by_name
+    instances: Dict[Tuple[str, Tuple], int] = {}
+    tmpl: Dict[Tuple, ServingTemplate] = {}
+    cost = 0.0
+    unmet: Dict[Tuple[str, str], float] = {}
+    for dem in p.demands:
+        left = dem.tokens_per_s
+        cands = []
+        for t in lib.get(dem.model, dem.phase):
+            for r in p.regions:
+                price = t.cost(r, cfg)
+                cands.append((price / max(t.throughput, 1e-9), r, t))
+        cands.sort(key=lambda x: x[0])
+        for _, r, t in cands:
+            if left <= 1e-9:
+                break
+            n = min(_max_instances(avail, r.name, t),
+                    int(np.ceil(left / t.throughput)))
+            if n <= 0:
+                continue
+            _consume(avail, r.name, t, n)
+            instances[(r.name, t.key)] = instances.get((r.name, t.key), 0) + n
+            tmpl[t.key] = t
+            cost += n * t.cost(r, cfg)
+            left -= n * t.throughput
+        if left > 1e-6:
+            unmet[(dem.model, dem.phase)] = left
+    return Allocation(instances, tmpl, cost, 0.0, unmet, 0.0, 0, True)
+
+
+def cauchy_allocate(p: AllocProblem, lib: TemplateLibrary) -> Allocation:
+    """Per-model ILP over homogeneous templates (phases jointly, models
+    sequentially — cost efficiency in the objective, no cross-model
+    coordination)."""
+    avail = dict(p.availability)
+    cfg = lib.config_by_name
+    instances: Dict[Tuple[str, Tuple], int] = {}
+    tmpl: Dict[Tuple, ServingTemplate] = {}
+    total_cost = 0.0
+    unmet: Dict[Tuple[str, str], float] = {}
+    models = sorted({d.model for d in p.demands})
+    for mname in models:
+        dems = [d for d in p.demands if d.model == mname]
+        mdl = MilpModel()
+        vvars = {}
+        rows: Dict[Tuple[str, str], Dict[int, float]] = {}
+        drows: Dict[Tuple[str, str], Dict[int, float]] = {}
+        pen: Dict[Tuple[str, str], float] = {}
+        for dem in dems:
+            dkey = (dem.model, dem.phase)
+            drows[dkey] = {}
+            temps = lib.get(dem.model, dem.phase)
+            if not temps:
+                continue
+            worst = max(t.cost(r, cfg) / max(t.throughput, 1e-9)
+                        for t in temps for r in p.regions)
+            pen[dkey] = 100.0 * worst
+            for r in p.regions:
+                for t in temps:
+                    ub = min(_max_instances(avail, r.name, t),
+                             int(np.ceil(dem.tokens_per_s
+                                         / max(t.throughput, 1e-9))) + 1)
+                    if ub <= 0:
+                        continue
+                    v = mdl.add_var(obj=t.cost(r, cfg), ub=ub, integer=True)
+                    vvars[(r.name, t.key)] = v
+                    tmpl[t.key] = t
+                    for c, k in t.counts:
+                        rows.setdefault((r.name, c), {})[v] = float(k)
+                    drows[dkey][v] = float(t.throughput)
+        for key, coeffs in rows.items():
+            mdl.add_constr(coeffs, ub=float(avail.get(key, 0)))
+        svars = {}
+        for dem in dems:
+            dkey = (dem.model, dem.phase)
+            coeffs = dict(drows.get(dkey, {}))
+            s = mdl.add_var(obj=pen.get(dkey, 1e5), lb=0.0,
+                            ub=dem.tokens_per_s)
+            svars[dkey] = s
+            coeffs[s] = 1.0
+            mdl.add_constr(coeffs, lb=dem.tokens_per_s)
+        res = mdl.solve(time_limit=p.time_limit, gap=1e-4)
+        if not res.ok:
+            for dem in dems:
+                unmet[(dem.model, dem.phase)] = dem.tokens_per_s
+            continue
+        for (rname, tkey), v in vvars.items():
+            n = int(round(res.x[v]))
+            if n > 0:
+                t = tmpl[tkey]
+                region = next(r for r in p.regions if r.name == rname)
+                _consume(avail, rname, t, n)
+                instances[(rname, tkey)] = instances.get((rname, tkey), 0) + n
+                total_cost += n * t.cost(region, cfg)
+        for dem in dems:
+            s = res.x[svars[(dem.model, dem.phase)]]
+            if s > 1e-6:
+                unmet[(dem.model, dem.phase)] = float(s)
+    return Allocation(instances, tmpl, total_cost, 0.0, unmet, 0.0, 0, True)
+
+
+# ------------------------------------------------------------- Helix-style
+def helix_placement(model: ServedModel, phase: str, wl: WorkloadStats,
+                    nodes: List[NodeConfig], slo_ms: Optional[float] = None
+                    ) -> Optional[Placement]:
+    """Monolithic pipeline over the full pool, nodes grouped by type.
+
+    Enumerates ordered merges of the type groups into stages (devices of
+    one type stay together) and optimizes the layer split with the same
+    bottleneck search as the exact solver.
+    """
+    slo = slo_ms if slo_ms is not None else (
+        model.prefill_slo_ms if phase == "prefill" else model.decode_slo_ms)
+    pt = ProfileTable(model, phase, slo, wl, max_stages=32)
+    by_name = {}
+    for n in nodes:
+        by_name[n.name] = n
+    names = [n.name for n in nodes]
+    types: Dict[str, List[str]] = {}
+    for n in names:
+        types.setdefault(n, []).append(n)
+    groups = list(types.values())
+    G = len(groups)
+    best = None
+
+    def split_variants(i, cur):
+        """Each type group may split into 1..4 near-equal sub-stages
+        (Helix's max-flow lets same-type nodes hold different layer
+        ranges; strict type-grouped stages can be infeasible when no
+        single node class can hold L/G layers)."""
+        if i == G:
+            yield [list(st) for st in cur]
+            return
+        g = groups[i]
+        for s in range(1, min(4, len(g)) + 1):
+            size = len(g) // s
+            subs, off = [], 0
+            for k in range(s):
+                extra = 1 if k < len(g) % s else 0
+                subs.append(g[off:off + size + extra])
+                off += size + extra
+            cur.extend(subs)
+            yield from split_variants(i + 1, cur)
+            del cur[-len(subs):]
+
+    for stages in split_variants(0, []):
+        S = len(stages)
+        if S > model.n_layers:
+            continue
+        tables = lambda nm, S_: pt.table(by_name[nm], S_)
+        arrs = [sum(tables(nm, S) for nm in st) for st in stages]
+        cand = np.unique(np.concatenate([a[a > 0] for a in arrs])) \
+            if any((a > 0).any() for a in arrs) else None
+        if cand is None or not len(cand):
+            continue
+
+        def feasible(T):
+            js = []
+            for a in arrs:
+                jmax = int(np.searchsorted(-a, -T, side="right"))
+                if jmax == 0:
+                    return None
+                js.append(jmax)
+            return js if sum(js) >= model.n_layers else None
+
+        lo, hi = 0, len(cand) - 1
+        if feasible(cand[0]) is None:
+            continue
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if feasible(cand[mid]) is not None:
+                lo = mid
+            else:
+                hi = mid - 1
+        T = float(cand[lo])
+        js = feasible(T)
+        counts = [1] * S
+        rest = model.n_layers - S
+        for i in range(S):
+            add = min(rest, js[i] - 1)
+            counts[i] += add
+            rest -= add
+        if rest > 0:
+            continue
+        pl = Placement(S, tuple(counts),
+                       tuple(tuple(sorted(st)) for st in stages), T)
+        if best is None or pl.throughput > best.throughput:
+            best = pl
+    return best

@@ -1,0 +1,189 @@
+"""Throughput-optimal model placement on a node combination (paper §4.2).
+
+Two solvers, property-tested to agree:
+
+1. ``optimal_placement_ilp`` — the paper's exact formulation: binaries
+   x_sj (stage s holds j layers), y_sk (node k in stage s), linearized
+   z_sjk, maximize T with per-stage constraints
+   T <= sum_jk z_sjk * T̂_j(g_k); optimum over S in [1, |G'|].
+   Solved with HiGHS via repro.solver.milp.
+
+2. ``optimal_placement_exact`` — an equivalent combinatorial algorithm
+   exploiting two structures the ILP ignores: (a) stages are symmetric,
+   so node->stage assignments reduce to *multiset partitions* of G'
+   (e.g. 6 identical nodes have 11 partitions, not 6^6 assignments);
+   (b) T̂_j is non-increasing in j, so for a fixed partition the optimal
+   layer split is found by binary-searching the bottleneck throughput:
+   partition {G_s} achieves T iff sum_s max{j : sum_{g in G_s} T̂_j(g) >= T} >= L.
+   ~10^2-10^3x faster than the ILP; this is what makes full-library
+   generation tractable on one core (beyond-paper contribution,
+   DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import NodeConfig
+from repro.core.profiles import ProfileTable
+from repro.solver.milp import MilpModel
+
+
+@dataclass(frozen=True)
+class Placement:
+    n_stages: int
+    layer_counts: Tuple[int, ...]           # per stage, sums to L
+    stage_nodes: Tuple[Tuple[str, ...], ...]  # node-config names per stage
+    throughput: float                        # tokens/s of the pipeline
+
+
+# ------------------------------------------------------------ exact solver
+def _multiset_partitions(items: Tuple[str, ...]):
+    """All partitions of a multiset into unordered non-empty groups."""
+    items = tuple(sorted(items))
+
+    def rec(remaining: Tuple[str, ...], groups: Tuple[Tuple[str, ...], ...]):
+        if not remaining:
+            yield groups
+            return
+        x, rest = remaining[0], remaining[1:]
+        seen = set()
+        for i, g in enumerate(groups):
+            key = g
+            if key in seen:
+                continue
+            seen.add(key)
+            yield from rec(rest, tuple(sorted(
+                groups[:i] + (tuple(sorted(g + (x,))),) + groups[i + 1:])))
+        yield from rec(rest, tuple(sorted(groups + ((x,),))))
+
+    out = set()
+    for p in rec(items, ()):
+        out.add(p)
+    return out
+
+
+def optimal_placement_exact(node_names: Sequence[str],
+                            tables: Callable[[str, int], np.ndarray],
+                            L: int,
+                            max_stages: Optional[int] = None) -> Optional[Placement]:
+    """node_names: node-config names of G'. tables(name, S) -> length-L
+    non-increasing array of T̂_j (j = 1..L) under per-stage budget slo/S."""
+    names = tuple(sorted(node_names))
+    K = len(names)
+    max_stages = min(max_stages or K, K)
+    best: Optional[Placement] = None
+
+    for groups in _multiset_partitions(names):
+        S = len(groups)
+        if S > max_stages or S > L:
+            continue
+        # per-stage throughput arrays under the S-stage budget
+        arrs = [sum(tables(n, S) for n in g) for g in groups]
+        # candidate bottleneck values: all distinct positive stage values
+        cand = np.unique(np.concatenate([a[a > 0] for a in arrs])
+                         ) if any((a > 0).any() for a in arrs) else None
+        if cand is None or len(cand) == 0:
+            continue
+
+        def feasible(T: float) -> Optional[List[int]]:
+            js = []
+            for a in arrs:
+                # largest j (1-indexed) with a[j-1] >= T; a non-increasing
+                jmax = int(np.searchsorted(-a, -T, side="right"))
+                if jmax == 0:
+                    return None
+                js.append(jmax)
+            return js if sum(js) >= L else None
+
+        lo, hi = 0, len(cand) - 1
+        if feasible(cand[0]) is None:
+            continue
+        while lo < hi:                       # largest feasible candidate
+            mid = (lo + hi + 1) // 2
+            if feasible(cand[mid]) is not None:
+                lo = mid
+            else:
+                hi = mid - 1
+        T = float(cand[lo])
+        js = feasible(T)
+        if js is None:
+            continue
+        # distribute the L layers: start from 1 each, fill up to jmax
+        counts = [1] * S
+        rest = L - S
+        for i in range(S):
+            add = min(rest, js[i] - 1)
+            counts[i] += add
+            rest -= add
+        if rest > 0:
+            continue
+        if best is None or T > best.throughput:
+            best = Placement(S, tuple(counts), groups, T)
+    return best
+
+
+# -------------------------------------------------------------- paper ILP
+def optimal_placement_ilp(node_names: Sequence[str],
+                          tables: Callable[[str, int], np.ndarray],
+                          L: int,
+                          max_stages: Optional[int] = None,
+                          time_limit: float = 30.0) -> Optional[Placement]:
+    """The paper's ILP, solved per S and maximized over S in [1, |G'|]."""
+    names = list(node_names)
+    K = len(names)
+    max_stages = min(max_stages or K, K)
+    best: Optional[Placement] = None
+
+    for S in range(1, max_stages + 1):
+        that = np.stack([tables(n, S) for n in names])   # (K, L)
+        tmax = float(that.sum(0).max())
+        if tmax <= 0:
+            continue
+        mdl = MilpModel()
+        T = mdl.add_var(obj=-1.0, lb=0.0, ub=tmax * K)
+        x = [[mdl.add_var(integer=True, ub=1) for _ in range(L)]
+             for _ in range(S)]
+        y = [[mdl.add_var(integer=True, ub=1) for _ in range(K)]
+             for _ in range(S)]
+        z = {}
+        for s in range(S):
+            for j in range(L):
+                for k in range(K):
+                    if that[k, j] <= 0:
+                        continue
+                    v = mdl.add_var(integer=True, ub=1)
+                    z[s, j, k] = v
+                    mdl.add_constr({v: 1, x[s][j]: -1}, ub=0)
+                    mdl.add_constr({v: 1, y[s][k]: -1}, ub=0)
+                    mdl.add_constr({v: 1, x[s][j]: -1, y[s][k]: -1}, lb=-1)
+        for s in range(S):
+            mdl.add_constr({x[s][j]: 1 for j in range(L)}, lb=1, ub=1)
+            coeffs = {T: 1.0}
+            for (s2, j, k), v in z.items():
+                if s2 == s:
+                    coeffs[v] = coeffs.get(v, 0.0) - float(that[k, j])
+            mdl.add_constr(coeffs, ub=0)
+        for k in range(K):
+            mdl.add_constr({y[s][k]: 1 for s in range(S)}, lb=1, ub=1)
+        mdl.add_constr({x[s][j]: j + 1 for s in range(S) for j in range(L)},
+                       lb=L, ub=L)
+        res = mdl.solve(time_limit=time_limit)
+        if not res.ok:
+            continue
+        tput = -res.obj
+        if tput <= 0:
+            continue
+        counts, stage_nodes = [], []
+        for s in range(S):
+            j = int(np.argmax([res.x[x[s][j]] for j in range(L)])) + 1
+            counts.append(j)
+            stage_nodes.append(tuple(sorted(
+                names[k] for k in range(K) if res.x[y[s][k]] > 0.5)))
+        cand = Placement(S, tuple(counts), tuple(stage_nodes), float(tput))
+        if best is None or cand.throughput > best.throughput + 1e-9:
+            best = cand
+    return best

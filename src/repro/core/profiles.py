@@ -1,0 +1,148 @@
+"""T̂_j(g): max throughput of node g holding j consecutive layers under a
+per-stage latency budget (paper §4.2, "obtained from a one-time offline
+profiling run").
+
+On real hardware this table comes from profiling; here it is an
+analytical roofline cost model over the node profiles of
+``repro.core.hardware`` (compute term, HBM term, capacity limit,
+pipeline-network term, iteration overhead). The interface — a table of
+T̂_j(g) per (model, phase, per-stage budget) — is identical, so measured
+tables can be dropped in. The event simulator (repro.simulator) uses the
+*same* cost model, which is what makes the Fig-6-style fidelity check an
+apples-to-apples comparison.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict
+
+import numpy as np
+
+from repro.core.hardware import (INTER_NODE_GBPS, INTER_NODE_LATENCY_S,
+                                 NodeConfig)
+from repro.core.modelspec import ServedModel
+
+# calibration constants (the "profiling fit")
+MFU_PREFILL = 0.55          # achievable fraction of peak FLOPs in prefill
+MFU_DECODE = 0.35           # gemm efficiency at small batch
+BW_EFF = 0.80               # achievable fraction of HBM bandwidth
+ALPHA_PREFILL = 3e-3        # per-iteration overhead (s)
+ALPHA_DECODE = 1.2e-3
+MEM_HEADROOM = 0.90         # fraction of HBM usable for weights+KV
+MAX_PREFILL_CHUNK = 16384   # engine cap on tokens per prefill iteration
+
+
+@dataclass(frozen=True)
+class WorkloadStats:
+    """Average request shape (from the trace class; repro.traces)."""
+    avg_prompt: float
+    avg_output: float
+
+    @property
+    def avg_ctx_decode(self) -> float:
+        return self.avg_prompt + self.avg_output / 2.0
+
+    @property
+    def max_ctx(self) -> float:
+        return self.avg_prompt * 2.0 + self.avg_output * 2.0
+
+
+def prefill_throughput(model: ServedModel, node: NodeConfig, j: int,
+                       budget_s: float, wl: WorkloadStats) -> float:
+    """Tokens/s of prefill for a stage of j layers on ``node``."""
+    w_bytes = model.bytes_for_layers(j)
+    mem = node.mem_gb * 1e9 * MEM_HEADROOM
+    if w_bytes > mem:
+        return 0.0
+    eff_flops = node.tflops * 1e12 * node.tp_efficiency() * MFU_PREFILL
+    eff_bw = node.bw_tbps * 1e12 * BW_EFF
+    f_tok = model.flops_per_token_layer(wl.avg_prompt / 2, "prefill") * j
+    net_tok = model.d_model * model.dtype_bytes / (INTER_NODE_GBPS * 1e9)
+    fixed = ALPHA_PREFILL + w_bytes / eff_bw + INTER_NODE_LATENCY_S
+    per_tok = f_tok / eff_flops + net_tok
+    # the average prompt must fit one iteration within the stage budget
+    if fixed + wl.avg_prompt * per_tok > budget_s:
+        return 0.0
+    chunk = min((budget_s - fixed) / per_tok, MAX_PREFILL_CHUNK)
+    t = fixed + chunk * per_tok
+    return chunk / t
+
+
+def decode_throughput(model: ServedModel, node: NodeConfig, j: int,
+                      budget_s: float, wl: WorkloadStats) -> float:
+    """Tokens/s of decode for a stage of j layers on ``node``."""
+    w_bytes = model.bytes_for_layers(j)
+    mem = node.mem_gb * 1e9 * MEM_HEADROOM
+    if w_bytes > mem:
+        return 0.0
+    eff_flops = node.tflops * 1e12 * node.tp_efficiency() * MFU_DECODE
+    eff_bw = node.bw_tbps * 1e12 * BW_EFF
+    ctx = wl.avg_ctx_decode
+    if model.recurrent:
+        kv_seq = j * 64 * model.d_model * 4     # SSM state, ctx-independent
+    else:
+        kv_seq = model.kv_bytes_per_seq(j, wl.max_ctx)
+    b_mem = (mem - w_bytes) / max(kv_seq, 1.0)
+    if b_mem < 1:
+        return 0.0
+
+    f_tok = model.flops_per_token_layer(ctx, "decode") * j
+    net_tok = model.d_model * model.dtype_bytes / (INTER_NODE_GBPS * 1e9)
+
+    def iter_time(b: float) -> float:
+        return (ALPHA_DECODE + INTER_NODE_LATENCY_S
+                + model.decode_read_bytes(j, b, ctx) / eff_bw
+                + b * f_tok / eff_flops + b * net_tok)
+
+    if iter_time(1.0) > budget_s:
+        return 0.0
+    # largest batch meeting the budget (iter_time is affine+monotone in b)
+    lo, hi = 1.0, float(b_mem)
+    if iter_time(hi) <= budget_s:
+        b = hi
+    else:
+        for _ in range(40):
+            mid = 0.5 * (lo + hi)
+            if iter_time(mid) <= budget_s:
+                lo = mid
+            else:
+                hi = mid
+        b = lo
+    return b / iter_time(b)
+
+
+def throughput(model: ServedModel, node: NodeConfig, j: int, phase: str,
+               budget_s: float, wl: WorkloadStats) -> float:
+    fn = prefill_throughput if phase == "prefill" else decode_throughput
+    return fn(model, node, j, budget_s, wl)
+
+
+class ProfileTable:
+    """Monotone T̂_j(g) tables per (model, phase, n_stages).
+
+    ``table(node, S)[j-1]`` = T̂_j(node) under per-stage budget slo/S,
+    made non-increasing in j (required by the exact placement solver;
+    physically, more layers on the same node is never faster).
+    """
+
+    def __init__(self, model: ServedModel, phase: str, slo_ms: float,
+                 wl: WorkloadStats, max_stages: int = 8):
+        self.model = model
+        self.phase = phase
+        self.slo_s = slo_ms / 1e3
+        self.wl = wl
+        self.max_stages = max_stages
+        self._cache: Dict = {}
+
+    def table(self, node: NodeConfig, n_stages: int) -> np.ndarray:
+        key = (node.name, n_stages)
+        if key not in self._cache:
+            budget = self.slo_s / n_stages
+            L = self.model.n_layers
+            vals = np.array([throughput(self.model, node, j, self.phase,
+                                        budget, self.wl)
+                             for j in range(1, L + 1)])
+            self._cache[key] = np.minimum.accumulate(vals)
+        return self._cache[key]

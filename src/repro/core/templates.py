@@ -1,0 +1,186 @@
+"""Serving Template generation (paper §4.2).
+
+Offline: for each (model, phase, SLO), enumerate node combinations with
+at most ``n_max`` nodes and total memory within [fit, rho x model size],
+and compute the throughput-optimal placement on each — yielding the
+Serving Template Library the online allocator consumes.
+
+Beyond the paper (DESIGN.md §6): usage-dominance Pareto pruning — a
+template is dropped if another template of the same (model, phase) has
+>= throughput and <= node usage of *every* config. Dominance in usage
+implies dominance in cost (any price vector) and in every availability
+constraint, so pruning is lossless for the online ILP.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import NodeConfig
+from repro.core.modelspec import ServedModel
+from repro.core.placement import (Placement, optimal_placement_exact,
+                                  optimal_placement_ilp)
+from repro.core.profiles import ProfileTable, WorkloadStats
+
+
+@dataclass(frozen=True)
+class ServingTemplate:
+    model: str
+    phase: str                              # prefill | decode
+    slo_ms: float
+    counts: Tuple[Tuple[str, int], ...]     # sorted (config_name, n)
+    placement: Placement
+    throughput: float
+
+    @property
+    def key(self) -> Tuple:
+        return (self.model, self.phase, self.counts)
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(n for _, n in self.counts)
+
+    def usage(self) -> Dict[str, int]:
+        return dict(self.counts)
+
+    def cost(self, region, config_by_name: Dict[str, NodeConfig]) -> float:
+        return sum(region.node_usd_per_hour(config_by_name[c]) * n
+                   for c, n in self.counts)
+
+
+def enumerate_combos(configs: Sequence[NodeConfig], n_max: int,
+                     mem_lo_gb: float, mem_hi_gb: float
+                     ) -> Iterable[Tuple[NodeConfig, ...]]:
+    """Multisets of <= n_max nodes with total memory in [lo, hi]."""
+    cfgs = sorted(configs, key=lambda c: c.mem_gb)
+    min_mem = cfgs[0].mem_gb
+
+    def rec(start: int, left: int, mem: float, acc):
+        if mem >= mem_lo_gb:
+            yield tuple(acc)
+        if left == 0:
+            return
+        for i in range(start, len(cfgs)):
+            m = cfgs[i].mem_gb
+            if mem + m > mem_hi_gb:
+                continue
+            acc.append(cfgs[i])
+            yield from rec(i, left - 1, mem + m, acc)
+            acc.pop()
+
+    yield from rec(0, n_max, 0.0, [])
+
+
+@dataclass
+class TemplateLibrary:
+    templates: Dict[Tuple[str, str], List[ServingTemplate]] = field(
+        default_factory=dict)
+    config_by_name: Dict[str, NodeConfig] = field(default_factory=dict)
+    stats: Dict[Tuple[str, str], Dict] = field(default_factory=dict)
+
+    def get(self, model: str, phase: str) -> List[ServingTemplate]:
+        return self.templates.get((model, phase), [])
+
+    def add(self, key, temps: List[ServingTemplate], stats: Dict):
+        self.templates[key] = temps
+        self.stats[key] = stats
+
+    @property
+    def size(self) -> int:
+        return sum(len(v) for v in self.templates.values())
+
+
+def pareto_prune(temps: List[ServingTemplate],
+                 config_names: Sequence[str]) -> List[ServingTemplate]:
+    """Drop usage-dominated templates (lossless, see module docstring)."""
+    if not temps:
+        return temps
+    order = sorted(temps, key=lambda t: -t.throughput)
+    n = len(order)
+    usage = np.array([[t.usage().get(c, 0) for c in config_names]
+                      for t in order])
+    tput = np.array([t.throughput for t in order])
+    kept_idx: List[int] = []
+    kept_usage = np.empty((n, len(config_names)), usage.dtype)
+    kept_tput = np.empty((n,), tput.dtype)
+    k = 0
+    for i in range(n):
+        if k:
+            ku = kept_usage[:k]
+            kt = kept_tput[:k]
+            dom = (ku <= usage[i]).all(axis=1) & (kt >= tput[i] - 1e-12)
+            # strict domination only (keep equals once)
+            strict = dom & ((ku < usage[i]).any(axis=1)
+                            | (kt > tput[i] + 1e-12))
+            if strict.any() or (dom & ~strict).any():
+                continue
+        kept_idx.append(i)
+        kept_usage[k] = usage[i]
+        kept_tput[k] = tput[i]
+        k += 1
+    return [order[i] for i in kept_idx]
+
+
+def generate_templates(model: ServedModel, phase: str,
+                       configs: Sequence[NodeConfig], wl: WorkloadStats,
+                       n_max: int = 6, rho: float = 12.0,
+                       solver: str = "exact", prune: bool = True,
+                       max_stages: Optional[int] = None,
+                       ) -> Tuple[List[ServingTemplate], Dict]:
+    """The Serving Template generator for one (model, SLO, phase)."""
+    t0 = time.time()
+    slo_ms = model.prefill_slo_ms if phase == "prefill" else model.decode_slo_ms
+    pt = ProfileTable(model, phase, slo_ms, wl)
+    by_name = {c.name: c for c in configs}
+    tables = lambda name, S: pt.table(by_name[name], S)
+
+    model_gb = model.bytes_total / 1e9
+    lo = model_gb * (0.9 if phase == "prefill" else 1.0)
+    # tiny models: rho x model_size can undershoot even one node's HBM;
+    # a single smallest node must always be admissible
+    hi = max(model_gb * rho, min(c.mem_gb for c in configs) + 1e-9)
+    out: List[ServingTemplate] = []
+    n_combos = 0
+    solve = optimal_placement_exact if solver == "exact" \
+        else optimal_placement_ilp
+    for combo in enumerate_combos(configs, n_max, lo, hi):
+        n_combos += 1
+        names = [c.name for c in combo]
+        pl = solve(names, tables, model.n_layers, max_stages=max_stages)
+        if pl is None or pl.throughput <= 0:
+            continue
+        counts: Dict[str, int] = {}
+        for n in names:
+            counts[n] = counts.get(n, 0) + 1
+        out.append(ServingTemplate(
+            model.name, phase, slo_ms,
+            tuple(sorted(counts.items())), pl, pl.throughput))
+    n_raw = len(out)
+    if prune:
+        out = pareto_prune(out, sorted(by_name))
+    stats = {"combos": n_combos, "templates_raw": n_raw,
+             "templates": len(out), "seconds": time.time() - t0,
+             "n_max": n_max, "rho": rho}
+    return out, stats
+
+
+def build_library(models: Sequence[ServedModel],
+                  configs: Sequence[NodeConfig],
+                  workloads: Dict[str, WorkloadStats],
+                  n_max: int = 6, rho: float = 12.0,
+                  prune: bool = True, solver: str = "exact",
+                  max_stages: Optional[int] = None) -> TemplateLibrary:
+    lib = TemplateLibrary(config_by_name={c.name: c for c in configs})
+    for m in models:
+        wl = workloads[m.name]
+        for phase in ("prefill", "decode"):
+            temps, stats = generate_templates(
+                m, phase, configs, wl, n_max=n_max, rho=rho, prune=prune,
+                solver=solver, max_stages=max_stages)
+            lib.add((m.name, phase), temps, stats)
+    return lib

@@ -1,0 +1,106 @@
+"""Sharding rules and helpers.
+
+Models are written mesh-agnostically: parameter initializers return a
+parallel tree of ``PartitionSpec``s, and activations are constrained via
+``constrain(x, spec)`` which is a no-op unless a mesh context is active
+(smoke tests run unsharded on 1 CPU device; the dry-run and launchers
+install the production mesh).
+
+Axis convention (DESIGN.md §5):
+  * "data"  — batch / FSDP shard axis (16 in production)
+  * "model" — TP / EP axis (16 in production)
+  * "pod"   — outer data axis across pods (2 in the multi-pod dry-run)
+Batch dims use ("pod", "data") when the pod axis exists.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.shape:
+        return 1
+    return mesh.shape[name]
+
+
+def batch_axes():
+    """Logical batch partition: ("pod","data") if pod exists else ("data",)."""
+    mesh = current_mesh()
+    if mesh is not None and "pod" in mesh.shape:
+        return ("pod", "data")
+    return ("data",)
+
+
+def _flatten_spec_axes(entry):
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def sanitize_spec(spec: P, shape) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim.
+
+    Lets one spec tree serve every mesh: e.g. a (12*128) fused-head dim
+    shards over model=16, while a 12-head axis would not and falls back
+    to replicated. Unknown axes (mesh without 'pod') are dropped too.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axes = _flatten_spec_axes(entry)
+        kept = []
+        prod = 1
+        for a in axes:
+            if a in mesh.shape and dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint if a mesh is active (no-op otherwise)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = sanitize_spec(P(*spec_entries), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(tree_specs, tree_shapes):
+    """Map a spec tree + shape tree -> NamedSharding tree (dry-run inputs)."""
+    mesh = current_mesh()
+    assert mesh is not None
+
+    def one(spec, shaped):
+        return NamedSharding(mesh, sanitize_spec(spec, shaped.shape))
+
+    return jax.tree.map(one, tree_specs, tree_shapes,
+                        is_leaf=lambda x: isinstance(x, P))

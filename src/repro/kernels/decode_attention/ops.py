@@ -1,0 +1,18 @@
+"""jit'd public wrapper for decode attention (inference-only: no vjp)."""
+from __future__ import annotations
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.decode_attention import kernel as _kernel
+from repro.kernels.decode_attention import ref as _ref
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale=None, window=0,
+                     impl: str | None = None):
+    """q: (B, H, D); k/v_cache: (B, Smax, KH, D); lengths: (B,) -> (B, H, D)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.decode_attention_reference(
+            q, k_cache, v_cache, lengths, scale=scale, window=window)
+    return _kernel.decode_attention_pallas(
+        q, k_cache, v_cache, lengths, scale=scale, window=window,
+        interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache.
+
+Two variants: the repeat-based oracle, and a grouped-einsum form that —
+like the Pallas kernel's index_map — never materializes the H/KH-fold
+replicated KV (REPRO_GQA_GROUPED=1, the §Perf "kernel-faithful lowering"
+iteration; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def _grouped() -> bool:
+    return os.environ.get("REPRO_GQA_GROUPED", "0") == "1"
+
+
+def decode_attention_reference(q, k_cache, v_cache, lengths, *,
+                               scale: float | None = None, window: int = 0):
+    """q: (B, H, D); k/v_cache: (B, Smax, KH, D); lengths: (B,) int32.
+
+    Position of the query token is lengths-1 (the cache already contains
+    the current token's K/V at index lengths-1). Returns (B, H, D).
+    """
+    if _grouped():
+        return decode_attention_grouped(q, k_cache, v_cache, lengths,
+                                        scale=scale, window=window)
+    B, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    g = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k_cache.astype(jnp.float32), g, axis=2)  # (B,S,H,D)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), g, axis=2)
+
+    logits = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    k_pos = jnp.arange(S)[None, None, :]
+    mask = k_pos < lengths[:, None, None]
+    if window and window > 0:
+        mask &= k_pos > (lengths[:, None, None] - 1 - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / (probs.sum(axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_grouped(q, k_cache, v_cache, lengths, *,
+                             scale: float | None = None, window: int = 0):
+    """GQA via grouped einsum: KV streamed once (no H/KH replication),
+    in the cache's native dtype with fp32 accumulation — a full fp32 KV
+    copy is exactly what the Pallas kernel avoids (it converts per-block
+    in VMEM)."""
+    B, H, D = q.shape
+    _, S, KH, _ = k_cache.shape
+    g = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype)
+    qg = qg.reshape(B, KH, g, D)
+
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)  # (B,KH,g,S)
+    k_pos = jnp.arange(S)[None, None, None, :]
+    mask = k_pos < lengths[:, None, None, None]
+    if window and window > 0:
+        mask &= k_pos > (lengths[:, None, None, None] - 1 - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / (probs.sum(axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,62 @@
+"""jit'd public wrapper for flash attention with impl dispatch.
+
+``impl``: 'ref' (jnp oracle; XLA-fused fast path on CPU), 'pallas'
+(compiled TPU kernel), 'pallas_interpret' (kernel body interpreted on CPU
+— used by the correctness sweeps).
+
+Differentiation: the Pallas path is wrapped in jax.custom_vjp with a
+recompute-from-reference backward (flash backward recomputes attention
+anyway; on CPU/interpret this keeps the oracle as the single source of
+gradient truth).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _pallas_attn(q, k, v, causal, window, scale, interpret):
+    return _kernel.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=interpret)
+
+
+def _pallas_attn_fwd(q, k, v, causal, window, scale, interpret):
+    out = _pallas_attn(q, k, v, causal, window, scale, interpret)
+    return out, (q, k, v)
+
+
+def _pallas_attn_bwd(causal, window, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.mha_reference(
+            q_, k_, v_, causal=causal, window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+_pallas_attn.defvjp(_pallas_attn_fwd, _pallas_attn_bwd)
+
+
+CHUNK_THRESHOLD = 2048   # switch to the memory-bounded chunked path
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, impl: str | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KH, D) -> (B, Sq, H, D)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        if q.shape[1] > CHUNK_THRESHOLD:
+            return _ref.mha_chunked(q, k, v, causal=causal, window=window,
+                                    scale=scale)
+        return _ref.mha_reference(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    return _pallas_attn(q, k, v, causal, window, scale,
+                        impl == "pallas_interpret")

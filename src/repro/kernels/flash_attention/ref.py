@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for blockwise flash attention (GQA + sliding window).
+
+``mha_reference`` materializes the full (Sq, Sk) score matrix — the
+bit-exact oracle for small shapes. ``mha_chunked`` processes query
+chunks with a lax.map so peak memory is O(chunk x Sk) — semantically
+identical, and the memory shape the Pallas kernel has on TPU; the
+dry-run lowers this variant for long sequences so memory_analysis
+reflects the kernelized data plane (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF
+
+
+def _grouped() -> bool:
+    # kernel-faithful GQA lowering (no repeated KV); see EXPERIMENTS §Perf
+    return os.environ.get("REPRO_GQA_GROUPED", "0") == "1"
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None, kv_len=None):
+    """Multi-head attention reference.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H % KH == 0 (GQA).
+    window > 0: sliding-window attention (each query attends to the last
+    ``window`` positions, inclusive of itself).
+    kv_len: optional (B,) valid KV lengths (decode with padded caches).
+    Query position i is aligned so that query i corresponds to absolute
+    position (Sk - Sq + i)  — standard "suffix" alignment for caches.
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    assert H % KH == 0, (H, KH)
+    g = H // KH
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads for GQA
+    kf = jnp.repeat(kf, g, axis=2)
+    vf = jnp.repeat(vf, g, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    mask = mask[None, None]
+    if kv_len is not None:
+        mask = mask & (k_pos[None, None] < kv_len[:, None, None, None])
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / (probs.sum(axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                scale: float | None = None, chunk: int = 512):
+    """Query-chunked attention: O(chunk x Sk) live scores."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    g = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(chunk, Sq)
+    if Sq % bq:
+        bq = Sq            # odd sizes: fall back to one chunk
+    nq = Sq // bq
+    grouped = _grouped()
+
+    if grouped:
+        kf = k.astype(jnp.float32)                    # (B,Sk,KH,D)
+        vf = v.astype(jnp.float32)
+    else:
+        kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+        vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    k_pos = jnp.arange(Sk)
+
+    def one(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)
+        qf = qs.astype(jnp.float32) * scale
+        if grouped:
+            qg = qf.reshape(B, bq, KH, g, D)
+            logits = jnp.einsum("bqcgd,bkcd->bcgqk", qg, kf)  # (B,KH,g,bq,Sk)
+        else:
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+        q_pos = i * bq + jnp.arange(bq) + (Sk - Sq)
+        mask = jnp.ones((bq, Sk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window and window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mexp = mask[None, None, None] if grouped else mask[None, None]
+        logits = jnp.where(mexp, logits, NEG_INF)
+        probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+        probs = probs / (probs.sum(-1, keepdims=True) + 1e-30)
+        if grouped:
+            out = jnp.einsum("bcgqk,bkcd->bqcgd", probs, vf)
+            return out.reshape(B, bq, H, D).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vf).astype(q.dtype)
+
+    out = jax.lax.map(one, jnp.arange(nq))          # (nq, B, bq, H, D)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)

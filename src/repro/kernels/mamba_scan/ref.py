@@ -1,0 +1,102 @@
+"""Pure-jnp oracle for the Mamba2 SSD selective scan.
+
+Semantics (per batch b, head h; state S in R^{P x N}):
+    lam_t = exp(dt_t * A_h)                       (A_h < 0 => decay)
+    S_t   = lam_t * S_{t-1} + (dt_t * x_t) outer B_t
+    y_t   = S_t @ C_t + D_h * x_t
+Shapes: x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,), B/C (B,S,N),
+D (H,), init_state (B,H,P,N). Returns (y (B,S,H,P), final_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, A, Bmat, Cmat, D, init_state=None):
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp            # (B,H,P), (B,H), (B,N), (B,N)
+        lam = jnp.exp(dtt * Af[None, :])               # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+        state = lam[..., None, None] * state + upd     # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct) + Df[None, :, None] * xt
+        return state, y
+
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, init_state, inputs)
+    y = ys.transpose(1, 0, 2, 3)          # (B,S,H,P)
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked_reference(x, dt, A, Bmat, Cmat, D, init_state=None,
+                          chunk: int = 64):
+    """Chunk-parallel SSD (the math the Pallas kernel implements), in jnp.
+
+    Mathematically identical to ssd_reference; used to validate the
+    chunk decomposition separately from the Pallas lowering.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, H)
+    Bf = Bmat.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cf = Cmat.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp            # (B,T,H,P), (B,T,H), (B,T,N), (B,T,N)
+        loglam = dtc * Af                                  # (B,T,H)
+        cum = jnp.cumsum(loglam, axis=1)                   # log L_t
+        Lt = jnp.exp(cum)                                  # (B,T,H)
+        # intra-chunk: M[t,u] = (C_t.B_u) dt_u exp(cum_t - cum_u), u <= t
+        ratio = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,T,U,H)
+        cb = jnp.einsum("btn,bun->btu", Cc, Bc)            # (B,T,U)
+        tri = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), jnp.float32))
+        M = cb[..., None] * dtc[:, None, :, :] * ratio * tri[None, :, :, None]
+        y = jnp.einsum("btuh,buhp->bthp", M, xc)
+        # inter-chunk: y += L_t * (S_0 @ C_t)
+        y += Lt[..., None] * jnp.einsum("bhpn,btn->bthp", state, Cc)
+        y += Df[None, None, :, None] * xc
+        # state update
+        Lend = jnp.exp(cum[:, -1:, :])                     # (B,1,H)
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc            # (B,T,H)
+        upd = jnp.einsum("bthp,btn,bth->bhpn", xc, Bc, w)
+        state = Lend[:, 0, :, None, None] * state + upd
+        return state, y
+
+    inputs = tuple(a.transpose(1, 0, *range(2, a.ndim))
+                   for a in (xf, dtf, Bf, Cf))
+    final, ys = jax.lax.scan(chunk_step, init_state, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, xt, dtt, A, Bt, Ct, D):
+    """Single-token recurrence. state (B,H,P,N); xt (B,H,P); dtt (B,H);
+    Bt/Ct (B,N). Returns (y (B,H,P), new_state)."""
+    lam = jnp.exp(dtt.astype(jnp.float32) * A[None, :])
+    upd = (dtt[..., None] * xt.astype(jnp.float32))[..., None] \
+        * Bt.astype(jnp.float32)[:, None, None, :]
+    state = lam[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Ct.astype(jnp.float32)) \
+        + D[None, :, None] * xt.astype(jnp.float32)
+    return y.astype(xt.dtype), state

@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the MoE grouped matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.moe_gmm import kernel as _kernel
+from repro.kernels.moe_gmm import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _gmm_diff(x, w, interpret):
+    return _kernel.gmm_pallas(x, w, interpret=interpret)
+
+
+def _gmm_fwd(x, w, interpret):
+    return _gmm_diff(x, w, interpret), (x, w)
+
+
+def _gmm_bwd(interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(_ref.gmm_reference, x, w)
+    return vjp(g)
+
+
+_gmm_diff.defvjp(_gmm_fwd, _gmm_bwd)
+
+
+def grouped_matmul(x, w, *, impl: str | None = None):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.gmm_reference(x, w)
+    return _gmm_diff(x, w, impl == "pallas_interpret")

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the MoE grouped (per-expert batched) matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_reference(x, w):
+    """x: (E, C, d) capacity-dispatched tokens; w: (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (This also means: no `from __future__ import annotations` in this file.)
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  jax.jit(step, in_shardings=..., donate...).lower(**specs).compile()
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod
+mesh. The compiled artifact yields memory_analysis() (fits-in-HBM proof),
+cost_analysis() (FLOPs / bytes for the roofline), and the optimized HLO
+from which collective bytes are parsed (the roofline's third term).
+Results are cached as JSON under artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh multi
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:\(|)[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        total = 0.0
+        for sm in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1.0
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0.0) + total
+    return out
+
+
+def _memory_dict(mem):
+    if mem is None:
+        return {}
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, name, None)
+        if callable(v):
+            try:
+                v = v()
+            except Exception:       # noqa: BLE001
+                v = None
+        if isinstance(v, (int, float)):
+            out[name] = int(v)
+    return out
+
+
+def build_step(cfg, shape):
+    """Returns (step_fn, example_inputs, in_shardings, donate) per kind."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import tree_shardings
+    from repro.models import api as mapi
+    from repro.train import optimizer as opt
+    from repro.train import steps
+
+    model = mapi.get_model(cfg)
+
+    spec_box = {}
+
+    def initfn(key):
+        p, s = model.init(key, cfg)
+        spec_box["s"] = s
+        return p
+
+    key = jax.ShapeDtypeStruct((2,), jax.numpy.uint32)
+    param_shapes = jax.eval_shape(initfn, key)
+    param_specs = spec_box["s"]
+    p_shard = tree_shardings(param_specs, param_shapes)
+
+    if shape.kind == "train":
+        oc = opt.OptConfig()
+        opt_shapes = jax.eval_shape(opt.init_opt_state, param_shapes)
+        opt_specs = opt.opt_state_specs(param_specs)
+        o_shard = tree_shardings(opt_specs, opt_shapes)
+        batch, bspecs = mapi.input_specs(cfg, shape)
+        b_shard = tree_shardings(bspecs, batch)
+        step = steps.make_train_step(cfg, oc)
+        return (step, (param_shapes, opt_shapes, batch),
+                (p_shard, o_shard, b_shard), (0, 1))
+    if shape.kind == "prefill":
+        batch, bspecs = mapi.input_specs(cfg, shape)
+        b_shard = tree_shardings(bspecs, batch)
+        step = steps.make_prefill_step(cfg)
+        return step, (param_shapes, batch), (p_shard, b_shard), ()
+    # decode
+    inputs, ispecs = mapi.input_specs(cfg, shape)
+    c_shard = tree_shardings(ispecs["cache"], inputs["cache"])
+    t_shard = tree_shardings(ispecs["tokens"], inputs["tokens"])
+    step = steps.make_serve_step(cfg)
+    return (step, (param_shapes, inputs["cache"], inputs["tokens"]),
+            (p_shard, c_shard, t_shard), (1,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             arch_overrides: Optional[dict] = None,
+             tag: str = "") -> Dict:
+    import jax
+    from repro.configs.base import SHAPE_BY_NAME, cell_is_runnable
+    from repro.configs.registry import get_config
+    from repro.distributed.sharding import use_mesh
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if arch_overrides:
+        cfg = cfg.with_(**arch_overrides)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell_id + ".json")
+
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "status": "skipped", "reason": why}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {cell_id}: SKIPPED ({why})")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with use_mesh(mesh):
+        step, inputs, shardings, donate = build_step(cfg, shape)
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+
+    # loop-aware HLO accounting: cost_analysis counts a lax.scan body
+    # once (trip count ignored — empirically verified), so flops/traffic/
+    # collectives come from repro.launch.hlo_analysis which multiplies
+    # while bodies by their trip counts and excludes fusion-internal
+    # traffic.
+    from repro.launch.hlo_analysis import analyse_hlo
+    hc = analyse_hlo(hlo)
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    rec = {
+        "cell": cell_id, "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "status": "ok",
+        "n_devices": n_dev,
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+        "flops_total": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "collective_bytes_total": float(sum(coll.values())),
+        "hlo_flops": hc.flops,
+        "hlo_traffic_bytes": hc.traffic,
+        "hlo_collective_bytes": dict(hc.collectives),
+        "hlo_collective_bytes_total": hc.collective_total,
+        "memory": _memory_dict(mem),
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "arch_overrides": arch_overrides or {},
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        gf = rec["flops_total"] / 1e12
+        print(f"[dryrun] {cell_id}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s TFLOPs={gf:.1f} "
+              f"coll={rec['collective_bytes_total']/1e9:.2f}GB")
+    return rec
+
+
+def correct_cell(path: str) -> bool:
+    """Add loop-aware HLO accounting to an existing artifact in place
+    (recompiles the cell to recover the optimized HLO text)."""
+    import jax
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.configs.registry import get_config
+    from repro.distributed.sharding import use_mesh
+    from repro.launch.hlo_analysis import analyse_hlo
+    from repro.launch.mesh import make_production_mesh
+
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok" or "hlo_flops" in rec:
+        return False
+    cfg = get_config(rec["arch"])
+    for k, v in rec.get("arch_overrides", {}).items():
+        cfg = cfg.with_(**{k: v})
+    shape = SHAPE_BY_NAME[rec["shape"]]
+    mesh = make_production_mesh(multi_pod=(rec["mesh"] == "2x16x16"))
+    with use_mesh(mesh):
+        step, inputs, shardings, donate = build_step(cfg, shape)
+        compiled = jax.jit(step, in_shardings=shardings,
+                           donate_argnums=donate).lower(*inputs).compile()
+        hc = analyse_hlo(compiled.as_text())
+    rec.update({
+        "hlo_flops": hc.flops,
+        "hlo_traffic_bytes": hc.traffic,
+        "hlo_collective_bytes": dict(hc.collectives),
+        "hlo_collective_bytes_total": hc.collective_total,
+    })
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] hlo-analysed {rec['cell']}: "
+          f"flops/dev {rec['hlo_flops']:.3g} "
+          f"coll {rec['hlo_collective_bytes_total']/1e9:.2f}GB")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--correct-only", action="store_true",
+                    help="add the scan-depth correction to existing "
+                         "artifacts (no main-cell recompilation)")
+    args = ap.parse_args()
+
+    if args.correct_only:
+        import glob as _glob
+        fails = []
+        for path in sorted(_glob.glob(os.path.join(args.out, "*.json"))):
+            try:
+                correct_cell(path)
+            except Exception as e:      # noqa: BLE001
+                fails.append((path, repr(e)[:160]))
+                print(f"[dryrun] correction FAILED {path}: {e!r}")
+        if fails:
+            raise SystemExit(1)
+        print("corrections complete")
+        return
+
+    from repro.configs.registry import ARCH_IDS, SHAPES
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for sh in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = os.path.join(args.out,
+                                    f"{arch}__{sh}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            continue
+                try:
+                    run_cell(arch, sh, mp, out_dir=args.out)
+                except Exception as e:      # noqa: BLE001
+                    failures.append((arch, sh, mesh_name, repr(e)[:200]))
+                    print(f"[dryrun] {arch}/{sh}/{mesh_name}: FAIL {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

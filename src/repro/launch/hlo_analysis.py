@@ -1,0 +1,252 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop (lax.scan) body
+ONCE, ignoring the trip count — useless for scanned-layer models. This
+module parses the optimized HLO and aggregates, recursively through
+``while`` (x trip count), ``fusion``, ``call`` and ``conditional``:
+
+  * flops            — dot ops: 2 x prod(result dims) x contracted dims
+  * traffic_bytes    — HBM traffic proxy: operand + result bytes of every
+                       *top-level* op (fusion internals are VMEM-resident
+                       and excluded; a fusion's own operands/results count
+                       once)
+  * collective_bytes — result-shape bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+Trip counts come from each while's condition computation (largest
+integer constant — the loop bound). Validated in
+tests/test_hlo_analysis.py: flops scale ~linearly with scan length and
+match the analytic 2*N*D for a dense forward pass.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?))\s+([\w\-]+)\(([^)]*)\)(.*)$")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_VIEW_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.traffic += mult * other.traffic
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + mult * v
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: List[Tuple[str, str, str, str, str]]   # (name, type, opcode,
+    #                                              operands, attrs)
+    types: Dict[str, str]                        # op name -> result type
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and ("->" in s):
+                hdr = s
+                is_entry = hdr.startswith("ENTRY")
+                if is_entry:
+                    hdr = hdr[len("ENTRY"):].strip()
+                name = hdr.split()[0].lstrip("%").split("(")[0].strip()
+                cur = _Comp(name, [], {})
+                if is_entry:
+                    entry = name
+            continue
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            oname, rtype, opcode, operands, attrs = m.groups()
+            cur.ops.append((oname, rtype, opcode, operands, attrs))
+            cur.types[oname] = rtype
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Optional[_Comp],
+                comps: Optional[Dict[str, "_Comp"]] = None) -> float:
+    """Trip count = the integer constant compared against the induction
+    variable in the loop condition (ROOT compare; +1 for LE)."""
+    if cond is None:
+        return 1.0
+
+    def const_map(comp):
+        out = {}
+        for n, _t, opc, ops, _a in comp.ops:
+            if opc == "constant":
+                m = re.match(r"\s*(\d+)\s*$", ops)
+                if m:
+                    out[n] = int(m.group(1))
+        return out
+
+    comps = comps or {}
+    consts = const_map(cond)
+    candidates = []
+    for n, _t, opc, ops, attrs in cond.ops:
+        if opc == "compare":
+            names = _OPERAND_RE.findall(ops)
+            vals = [consts[x] for x in names if x in consts]
+            if vals:
+                bump = 1 if "direction=LE" in attrs else 0
+                candidates.append(vals[0] + bump)
+        elif opc == "fusion":
+            fm = _CALLS_RE.search(attrs)
+            callee = comps.get(fm.group(1)) if fm else None
+            if callee is not None:
+                inner = const_map(callee)
+                inner.update(consts)
+                for n2, _t2, opc2, ops2, attrs2 in callee.ops:
+                    if opc2 == "compare":
+                        names = _OPERAND_RE.findall(ops2)
+                        vals = [inner[x] for x in names if x in inner]
+                        if vals:
+                            bump = 1 if "direction=LE" in attrs2 else 0
+                            candidates.append(vals[0] + bump)
+    if not candidates:
+        return 1.0
+    return float(candidates[-1])   # the ROOT-feeding compare comes last
+
+
+def analyse_hlo(text: str) -> Cost:
+    comps, entry = _parse(text)
+    if entry is None and comps:
+        entry = max(comps, key=lambda k: len(comps[k].ops))
+    if entry is None:
+        return Cost()
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(cname: str, inside_fusion: bool) -> Cost:
+        key = (cname, inside_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()
+        comp = comps.get(cname)
+        if comp is None:
+            return memo[key]
+        c = Cost()
+        for oname, rtype, opcode, operands, attrs in comp.ops:
+            full_attrs = operands + attrs
+            if opcode == "dot":
+                out = 1.0
+                for d in _shape_dims(rtype):
+                    out *= d
+                contr = 1.0
+                cm = _CONTRACT_RE.search(attrs)
+                ops_names = _OPERAND_RE.findall(operands)
+                if cm and ops_names:
+                    lhs_t = comp.types.get(ops_names[0], "")
+                    lhs_dims = _shape_dims(lhs_t)
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contr *= lhs_dims[int(idx)]
+                c.flops += 2.0 * out * contr
+            is_coll = False
+            for coll in COLLECTIVES:
+                if opcode == coll or opcode == coll + "-start":
+                    c.collectives[coll] = c.collectives.get(coll, 0.0) \
+                        + _shape_bytes(rtype)
+                    is_coll = True
+                    break
+            if opcode == "while":
+                bm = _CALLS_RE.search(attrs)
+                # XLA annotates loops with the exact trip count
+                km = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+                if km:
+                    trips = float(km.group(1))
+                else:
+                    cm_ = _COND_RE.search(attrs)
+                    trips = _trip_count(comps.get(cm_.group(1)), comps) \
+                        if cm_ else 1.0
+                if bm:
+                    c.add(cost_of(bm.group(1), inside_fusion), trips)
+                # loop-carried tuple traffic is internal; skip
+                continue
+            if opcode == "fusion":
+                fm = _CALLS_RE.search(attrs)
+                if fm:
+                    sub = cost_of(fm.group(1), True)
+                    c.flops += sub.flops
+                    for k, v in sub.collectives.items():
+                        c.collectives[k] = c.collectives.get(k, 0.0) + v
+                if not inside_fusion:
+                    c.traffic += _shape_bytes(rtype)
+                    for op_name in _OPERAND_RE.findall(operands):
+                        c.traffic += _shape_bytes(comp.types.get(op_name, ""))
+                continue
+            if opcode in ("call", "async-start", "custom-call"):
+                fm = _CALLS_RE.search(attrs)
+                if fm:
+                    c.add(cost_of(fm.group(1), inside_fusion))
+            if opcode == "conditional":
+                bm = _BRANCHES_RE.search(attrs)
+                if bm:
+                    subs = [cost_of(b.strip().lstrip("%"), inside_fusion)
+                            for b in bm.group(1).split(",") if b.strip()]
+                    if subs:
+                        c.add(max(subs, key=lambda s: s.flops + s.traffic))
+            if not inside_fusion and not is_coll and opcode not in _VIEW_OPS:
+                c.traffic += _shape_bytes(rtype)
+                for op_name in _OPERAND_RE.findall(operands):
+                    c.traffic += _shape_bytes(comp.types.get(op_name, ""))
+        memo[key] = c
+        return c
+
+    return cost_of(entry, False)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The single-pod
+mesh is 16x16 = 256 chips ("data", "model"); the multi-pod mesh adds a
+leading "pod" axis (2x16x16 = 512 chips). When more devices exist than
+the mesh needs (the dry-run forces 512 host devices), the first
+``prod(shape)`` devices are used.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run through launch/dryrun.py which forces "
+            "xla_force_host_platform_device_count=512")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(axis: str = "data"):
+    """1-device mesh for smoke tests of sharded code paths."""
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape((1,)), (axis,))

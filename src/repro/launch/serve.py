@@ -1,0 +1,83 @@
+"""Serving launcher: run a model behind the JAX serving engine with
+batched synthetic requests (the paper-kind end-to-end driver).
+
+CPU container: use --smoke (reduced config). On TPU the same code path
+serves the full config with the production mesh shardings.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models import api as mapi
+from repro.serving.engine import JaxEngine
+
+
+def serve(cfg, n_requests: int = 32, rate: float = 5.0, max_batch: int = 8,
+          max_len: int = 256, seed: int = 0):
+    model = mapi.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed), cfg)
+    eng = JaxEngine(cfg, params, max_batch=max_batch, max_len=max_len)
+    rng = np.random.default_rng(seed)
+
+    prompts = rng.integers(8, 64, size=n_requests)
+    outs = rng.integers(8, 32, size=n_requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+
+    t0 = time.time()
+    submitted, finished = 0, {}
+    lat_first, lat_token = [], []
+    sub_t = {}
+    while len(finished) < n_requests:
+        now = time.time() - t0
+        while submitted < n_requests and arrivals[submitted] <= now:
+            rid = submitted
+            eng.submit(rid, rng.integers(0, cfg.vocab_size,
+                                         size=(int(prompts[rid]),)),
+                       int(outs[rid]))
+            sub_t[rid] = time.time()
+            submitted += 1
+        if not any(eng.slots) and not eng.queue:
+            if submitted < n_requests:
+                time.sleep(0.005)
+            continue
+        reqs = {s.rid: s for s in eng.slots if s is not None}
+        for rid, _tok, done in eng.step():
+            if done:
+                finished[rid] = reqs[rid]
+    for rid, r in finished.items():
+        lat_first.append(r.prefill_done - sub_t[rid])
+        if len(r.token_times) > 1:
+            lat_token += list(np.diff(r.token_times))
+    wall = time.time() - t0
+    total_tokens = sum(len(r.out_tokens) for r in finished.values())
+    print(f"[serve] {n_requests} requests, {total_tokens} tokens "
+          f"in {wall:.1f}s -> {total_tokens / wall:.1f} tok/s")
+    print(f"[serve] TTFT   p50={np.percentile(lat_first, 50)*1e3:.1f}ms "
+          f"p95={np.percentile(lat_first, 95)*1e3:.1f}ms")
+    if lat_token:
+        print(f"[serve] TPOT   p50={np.percentile(lat_token, 50)*1e3:.1f}ms "
+              f"p95={np.percentile(lat_token, 95)*1e3:.1f}ms")
+    return finished
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=5.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    serve(cfg, n_requests=args.requests, rate=args.rate,
+          max_batch=args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Training launcher: end-to-end driver for the assigned architectures.
+
+Small-scale runnable on this CPU container (examples/train_small.py uses
+it to train a ~small model for a few hundred steps); the same loop with
+the production mesh is what the dry-run lowers.
+
+Features (DESIGN.md §8): synthetic data pipeline with prefetch, AdamW +
+cosine/WSD schedule, grad clipping, remat via configs, async
+checkpoint/restore (fault tolerance: restart resumes from the latest
+step), periodic metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models import api as mapi
+from repro.train import checkpoint as ckpt_mod
+from repro.train import optimizer as opt
+from repro.train import steps
+from repro.train.data import SyntheticLM
+
+
+def train_loop(cfg, steps_total: int = 200, batch_size: int = 8,
+               seq_len: int = 64, ckpt_dir: Optional[str] = None,
+               ckpt_every: int = 50, log_every: int = 10,
+               seed: int = 0, resume: bool = False):
+    model = mapi.get_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params, _specs = model.init(key, cfg)
+    opt_state = opt.init_opt_state(params)
+    oc = opt.OptConfig(total_steps=steps_total,
+                       warmup_steps=max(steps_total // 20, 5),
+                       schedule="wsd" if "minicpm" in cfg.name else "cosine")
+    train_step = jax.jit(steps.make_train_step(cfg, oc),
+                         donate_argnums=(0, 1))
+
+    ckpt = ckpt_mod.Checkpointer(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if ckpt and resume and ckpt.latest_step() is not None:
+        (params, opt_state), start = ckpt.restore(
+            {"p": params, "o": opt_state})["p" if False else slice(None)] \
+            if False else (None, 0)
+        state, start = ckpt.restore({"p": params, "o": opt_state})
+        params, opt_state = state["p"], state["o"]
+        print(f"[train] resumed from step {start}")
+
+    data = SyntheticLM(cfg.vocab_size, seq_len, batch_size, seed=seed)
+    losses = []
+    t0 = time.time()
+    try:
+        for step_i in range(start, steps_total):
+            batch = next(data)
+            if cfg.family == "audio":
+                batch["frames"] = np.zeros(
+                    (batch_size, cfg.enc_seq, cfg.d_model), np.float32)
+            if cfg.family == "vlm":
+                batch["vision_embeds"] = np.zeros(
+                    (batch_size, cfg.n_vision_tokens, cfg.d_model),
+                    np.float32)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step_i + 1) % log_every == 0:
+                rate = (step_i + 1 - start) / (time.time() - t0)
+                print(f"[train] step {step_i+1}/{steps_total} "
+                      f"loss={losses[-1]:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} {rate:.2f} it/s")
+            if ckpt and (step_i + 1) % ckpt_every == 0:
+                ckpt.save(step_i + 1, {"p": params, "o": opt_state})
+    finally:
+        data.close()
+        if ckpt:
+            ckpt.wait()
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (CPU container)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    _, _, losses = train_loop(cfg, args.steps, args.batch, args.seq,
+                              ckpt_dir=args.ckpt_dir, resume=args.resume)
+    print(f"[train] done: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

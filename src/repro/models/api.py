@@ -1,0 +1,75 @@
+"""Unified model API: family dispatch + dry-run input specs.
+
+Every family module exposes: init, forward, prefill, decode_step,
+init_cache. ``input_specs(cfg, shape)`` returns ShapeDtypeStruct
+stand-ins for every input of the step lowered for that shape cell
+(weak-type-correct, shardable, no device allocation) together with the
+PartitionSpec tree used by the dry-run.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import common as cm
+from repro.models import hybrid, transformer, whisper, xlstm
+
+_FAMILY = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "audio": whisper, "hybrid": hybrid, "ssm": xlstm,
+}
+
+
+def get_model(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                with_labels: bool) -> Tuple[Dict, Dict]:
+    """ShapeDtypeStructs + PartitionSpecs for a forward/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    dp = ("pod", "data")
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    specs = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt)
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), dt)
+        specs["vision_embeds"] = P(dp, None, None)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = P(dp, None)
+    return batch, specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Dict, Dict]:
+    """(inputs, specs) for serve_step: one new token with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, B, S, dt)[0])
+    _, cache_specs = model.init_cache(cfg, 1, 1, dt)
+    inputs = {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    specs = {"cache": cache_specs, "tokens": P(("pod", "data"))}
+    # audio cross-cache also present (already inside cache pytree)
+    return inputs, specs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Dispatch per shape kind (train/prefill/decode)."""
+    if shape.kind == "train":
+        return batch_specs(cfg, shape, with_labels=True)
+    if shape.kind == "prefill":
+        return batch_specs(cfg, shape, with_labels=False)
+    return decode_specs(cfg, shape)

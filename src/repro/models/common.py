@@ -1,0 +1,134 @@
+"""Shared pure-JAX model building blocks (no flax): params are nested
+dicts of arrays; every initializer returns (params, specs) where specs is
+a parallel tree of PartitionSpecs (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def stacked(init_fn, key, n: int):
+    """Stack per-layer (params, specs): params -> (n, ...), specs -> P(None, *)."""
+    keys = jax.random.split(key, n)
+    p0, s0 = init_fn(keys[0])
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(lambda s: P(None, *tuple(s)), s0,
+                         is_leaf=lambda x: isinstance(x, P))
+    return params, specs
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(x, p, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                              # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    half = head_dim // 2
+    s1 = half // 4
+    s2 = (half - s1) // 2
+    return s1, s2, half - s1 - s2
+
+
+def apply_mrope(x, positions3, theta: float):
+    """M-RoPE: positions3 (3, ..., S) = (temporal, h, w) ids; frequency
+    bands are split across the three components (Qwen2-VL §2)."""
+    D = x.shape[-1]
+    half = D // 2
+    inv = rope_freqs(D, theta)
+    secs = mrope_sections(D)
+    parts, off = [], 0
+    for comp, sec in zip(range(3), secs):
+        ang = positions3[comp][..., None].astype(jnp.float32) * inv[off:off + sec]
+        parts.append(ang)
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)                   # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(S: int, d: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    inv = 1.0 / (10000.0 ** (jnp.arange(d // 2, dtype=jnp.float32) / (d // 2)))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------- embeddings
+def embedding_init(key, cfg, dtype):
+    vp = padded_vocab(cfg.vocab_size)
+    p = {"embed": dense_init(key, cfg.d_model, (vp, cfg.d_model), dtype)}
+    s = {"embed": P("model", None)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(k2, cfg.d_model, (cfg.d_model, vp), dtype)
+        s["unembed"] = P(None, "model")
+    return p, s
+
+
+def embed_tokens(p, tokens):
+    return p["embed"][tokens]
+
+
+def unembed(p, cfg, x):
+    w = p.get("unembed")
+    if w is None:
+        w = p["embed"].T
+    return x @ w
+
+
+# -------------------------------------------------------------------- loss
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE over valid labels; logits may be vocab-padded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab_size)
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

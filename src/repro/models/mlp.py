@@ -1,0 +1,175 @@
+"""Dense SwiGLU MLP and MoE (top-k, capacity-dispatched, EP-shardable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, batch_axes
+from repro.kernels.moe_gmm import ops as gmm_ops
+from repro.models import common as cm
+
+PRODUCTION_TP = 16  # model-axis size of the production mesh (DESIGN.md §5)
+
+
+def mlp_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    fsdp = "data" if cfg.weight_sharding == "fsdp" else None
+    ks = jax.random.split(key, 3)
+    p = {"wg": cm.dense_init(ks[0], d, (d, f), dtype),
+         "wu": cm.dense_init(ks[1], d, (d, f), dtype),
+         "wd": cm.dense_init(ks[2], f, (f, d), dtype)}
+    s = {"wg": P(fsdp, "model"), "wu": P(fsdp, "model"),
+         "wd": P("model", fsdp)}
+    return p, s
+
+
+def mlp_forward(p, cfg, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    h = constrain(h, batch_axes(), None, "model")
+    return h @ p["wd"]
+
+
+# ------------------------------------------------------------------- MoE
+def moe_init(key, cfg, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    fsdp = "data" if cfg.weight_sharding == "fsdp" else None
+    ks = jax.random.split(key, 4)
+    # EP over the model axis when the expert count divides it; otherwise
+    # TP over the per-expert hidden dim (granite: 40 experts, f=512).
+    ep = (E % PRODUCTION_TP == 0)
+    we_spec = P("model", fsdp, None) if ep else P(None, fsdp, "model")
+    wd_spec = P("model", None, fsdp) if ep else P(None, "model", fsdp)
+    p = {"router": cm.dense_init(ks[0], d, (d, E), jnp.float32),
+         "wg": cm.dense_init(ks[1], d, (E, d, f), dtype),
+         "wu": cm.dense_init(ks[2], d, (E, d, f), dtype),
+         "wd": cm.dense_init(ks[3], f, (E, f, d), dtype)}
+    s = {"router": P(None, None), "wg": we_spec, "wu": we_spec, "wd": wd_spec}
+    return p, s
+
+
+def moe_forward(p, cfg, x):
+    if cfg.moe_impl == "sorted":
+        return moe_forward_sorted(p, cfg, x)
+    return moe_forward_onehot(p, cfg, x)
+
+
+def moe_forward_onehot(p, cfg, x):
+    """Capacity-factor top-k MoE (GShard-style dispatch via one-hot matmul).
+
+    x: (B, S, d) -> (B, S, d). Returns also an aux load-balancing loss.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    cap = int(cfg.moe_capacity_factor * K * T / E + 0.999)
+    cap = max(cap, 4)
+    # position of each (token, k) slot within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=0) - 1                  # (T*K, E)
+    slot = (pos_in_e * flat).sum(-1).reshape(T, K)           # (T, K)
+    keep = (slot < cap) & (gate_vals > 0)
+
+    # dispatch tensor (T, K) -> (E, cap) one-hot combine
+    disp = (jax.nn.one_hot(gate_idx, E, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
+                             dtype=xt.dtype)[:, :, None, :])  # (T,K,E,cap+1)
+    disp = disp[..., :cap].sum(1)                            # (T, E, cap)
+    xe = jnp.einsum("td,tec->ecd", xt, disp)                 # (E, cap, d)
+    xe = constrain(xe, "model", None, None)
+
+    h = jax.nn.silu(gmm_ops.grouped_matmul(xe, p["wg"])) \
+        * gmm_ops.grouped_matmul(xe, p["wu"])                # (E, cap, f)
+    ye = gmm_ops.grouped_matmul(h, p["wd"])                  # (E, cap, d)
+
+    # combine: weight the dispatch tensor by each (token, expert)'s gate
+    gates_e = jnp.einsum("tke,tk->te", onehot.astype(xt.dtype),
+                         (gate_vals * keep).astype(xt.dtype))  # (T, E)
+    comb = disp * gates_e[:, :, None]                          # (T, E, cap)
+    y = jnp.einsum("ecd,tec->td", ye, comb)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(0)                                       # (E,)
+    ce = (disp.sum(-1) > 0).astype(jnp.float32).mean(0)      # (E,)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------- sorted MoE dispatch
+def moe_forward_sorted(p, cfg, x):
+    """Sorted (argsort/scatter) capacity MoE dispatch — linear in tokens.
+
+    The GShard one-hot dispatch materializes a (T, E, cap) tensor and two
+    T x E x cap x d einsums (cap ~ T/E x factor => O(T^2) work/memory).
+    Here tokens are grouped by sequence (the group axis shards over
+    "data"), sorted by expert id inside each group, scattered into the
+    (E, cap, d) expert buffers, processed by the grouped matmul kernel,
+    and gathered back — O(T·K·d) bytes, no quadratic tensor.
+    Capacity is per group: cap_g = ceil(factor * K * Tg / E).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    Tg = S * K
+    cap = int(cfg.moe_capacity_factor * K * S / E + 0.999)
+    cap = max(cap, 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"])             # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (B, S, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    ids = gate_idx.reshape(B, Tg)                              # (B, S*K)
+    order = jnp.argsort(ids, axis=-1, stable=True)             # (B, Tg)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=-1)
+    counts = jax.nn.one_hot(ids, E, dtype=jnp.int32).sum(1)    # (B, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts              # exclusive
+    rank = jnp.arange(Tg)[None, :] - jnp.take_along_axis(
+        starts, sorted_ids, axis=-1)                           # (B, Tg)
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_ids * cap + rank, E * cap)   # (B, Tg)
+    src_tok = order // K                                       # (B, Tg)
+
+    # scatter tokens into per-expert capacity buffers
+    xs = jnp.take_along_axis(x, src_tok[..., None], axis=1)    # (B, Tg, d)
+    buf = jnp.zeros((B, E * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, dst, v: b.at[dst].add(v))(buf, dest, xs)
+    xe = buf[:, :E * cap, :].reshape(B, E, cap, d)
+    xe2 = xe.transpose(1, 0, 2, 3).reshape(E, B * cap, d)
+    # E % TP == 0: EP — experts sharded over "model", tokens routed by a
+    # sized all-to-all. Otherwise expert-TP: tokens stay data-resident
+    # and every device applies all experts with model-sharded hidden dims
+    # (constraining E over a non-dividing axis would silently replicate
+    # the buffers — a 32 GB/layer all-gather; see EXPERIMENTS §Perf A2).
+    ep = (E % PRODUCTION_TP == 0)
+    xe2 = constrain(xe2, "model" if ep else None, "data", None)
+
+    h = jax.nn.silu(gmm_ops.grouped_matmul(xe2, p["wg"])) \
+        * gmm_ops.grouped_matmul(xe2, p["wu"])
+    ye = gmm_ops.grouped_matmul(h, p["wd"])                    # (E, B*cap, d)
+    ye = ye.reshape(E, B, cap, d).transpose(1, 0, 2, 3)        # (B, E, cap, d)
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * cap, d), jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+
+    # gather back to (token, k) slots and combine with gates
+    out_sorted = jnp.take_along_axis(ye_flat, dest[..., None], axis=1)
+    inv = jnp.argsort(order, axis=-1)                          # (B, Tg)
+    out_tk = jnp.take_along_axis(out_sorted, inv[..., None], axis=1)
+    out_tk = out_tk.reshape(B, S, K, d)
+    keep_tk = jnp.take_along_axis(keep.astype(x.dtype), inv, axis=-1
+                                  ).reshape(B, S, K)
+    y = jnp.einsum("bskd,bsk->bsd", out_tk,
+                   gate_vals.astype(x.dtype) * keep_tk)
+
+    # load-balancing aux (same definition as the one-hot path)
+    me = probs.reshape(B * S, E).mean(0)
+    ce = (counts.astype(jnp.float32) / Tg).mean(0)
+    aux = E * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,439 @@
+"""xLSTM LM: mLSTM (matrix-memory, exponential gating) blocks with an
+sLSTM (scalar-memory, diagonal recurrence) block every ``slstm_every``
+layers. Fully recurrent — decode state is O(1) in context length.
+
+The mLSTM forward uses the stabilized *parallel* form for full sequences
+(train/prefill) and the exact recurrent form for decode; the two are
+mathematically identical because the output
+    h_t = C_t q_t / max(|n_t . q_t|, exp(-m_t))
+is invariant to the stabilizer m (see tests/test_models.py).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, batch_axes
+from repro.models import common as cm
+
+CONV = 4  # causal conv width in the mLSTM block
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg, dtype):
+    d, di, H = cfg.d_model, cfg.mlstm_d_inner, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    fsdp = "data" if cfg.weight_sharding == "fsdp" else None
+    p = {
+        "ln": cm.rmsnorm_init(d, dtype)[0],
+        "up": cm.dense_init(ks[0], d, (d, 2 * di), dtype),
+        "conv_w": cm.dense_init(ks[1], CONV, (CONV, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": cm.dense_init(ks[2], di, (di, di), dtype),
+        "wk": cm.dense_init(ks[3], di, (di, di), dtype),
+        "wv": cm.dense_init(ks[4], di, (di, di), dtype),
+        "w_if": cm.dense_init(ks[5], di, (di, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]
+                                ).astype(jnp.float32),
+        "norm": cm.rmsnorm_init(di, dtype)[0],
+        "down": cm.dense_init(jax.random.fold_in(key, 9), di, (di, d), dtype),
+    }
+    s = {
+        "ln": {"scale": P(None)},
+        "up": P(fsdp, "model"), "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "wq": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+        "w_if": P("model", None), "b_if": P(None),
+        "norm": {"scale": P("model")},
+        "down": P("model", fsdp),
+    }
+    return p, s
+
+
+def _mlstm_project(p, cfg, x_in, conv_window):
+    """Shared projection math. x_in (..., d). conv_window: callable giving
+    the causally-convolved x. Returns q,k,v,(log_i,log_f),z."""
+    di, H = cfg.mlstm_d_inner, cfg.n_heads
+    up = x_in @ p["up"]
+    x, z = up[..., :di], up[..., di:]
+    xc = conv_window(x)
+    q = xc @ p["wq"]
+    k = xc @ p["wk"]
+    v = x @ p["wv"]
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    log_i = gates[..., :H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+    return q, k, v, log_i, log_f, z, x
+
+
+def _heads(cfg, t):
+    H = cfg.n_heads
+    return t.reshape(*t.shape[:-1], H, t.shape[-1] // H)
+
+
+CHUNK = 256  # chunk length for the memory-bounded parallel form
+
+
+def _mlstm_chunked(qh, kh, vh, log_i, log_f, state=None):
+    """Chunkwise-parallel stabilized mLSTM: O(chunk^2) score blocks with
+    an inter-chunk (C, n, m) state recurrence — identical outputs to the
+    token recurrence (property-tested). qh/kh/vh: (B,S,H,dh) fp32;
+    log_i/log_f: (B,S,H). Returns (hh, (C, n, m) final state)."""
+    B, S, H, dh = qh.shape
+    Tc = CHUNK if S % CHUNK == 0 else S
+    nc = S // Tc
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def resh(x):
+        x = x.reshape(B, nc, Tc, *x.shape[2:])
+        return jnp.moveaxis(x, 1, 0)
+
+    t_idx = jnp.arange(Tc)
+    causal = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+
+    def chunk_step(carry, inp):
+        C, n, m0c = carry
+        qc, kc, vc, lic, lfc = inp                  # (B,Tc,H,dh)/(B,Tc,H)
+        F = jnp.cumsum(lfc, axis=1)                 # (B,Tc,H)
+        Dmat = F[:, :, None, :] - F[:, None, :, :] + lic[:, None, :, :]
+        Dmat = jnp.where(causal, Dmat, -jnp.inf)    # (B,T,U,H)
+        m_intra = jnp.max(Dmat, axis=2)             # (B,Tc,H)
+        m_inter = F + m0c[:, None, :]               # (B,Tc,H)
+        m = jnp.maximum(m_intra, m_inter)
+        decay = jnp.exp(Dmat - m[:, :, None, :])
+        scores = jnp.einsum("bthd,buhd->btuh", qc, kc) * decay
+        w_inter = jnp.exp(m_inter - m)              # (B,Tc,H)
+        num = jnp.einsum("btuh,buhd->bthd", scores, vc) \
+            + w_inter[..., None] * jnp.einsum("bhde,bthe->bthd", C, qc)
+        den = jnp.sum(scores, axis=2) \
+            + w_inter * jnp.einsum("bhd,bthd->bth", n, qc)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+        hh = num / den[..., None]
+        # carry the state to the end of the chunk
+        Fe = F[:, -1:, :]                           # (B,1,H)
+        dd = Fe - F + lic                           # (B,Tc,H)
+        m_end = jnp.maximum(Fe[:, 0] + m0c, jnp.max(dd, axis=1))
+        wu = jnp.exp(dd - m_end[:, None, :])
+        C = jnp.exp(Fe[:, 0] + m0c - m_end)[..., None, None] * C \
+            + jnp.einsum("buh,buhd,buhe->bhde", wu, vc, kc)
+        n = jnp.exp(Fe[:, 0] + m0c - m_end)[..., None] * n \
+            + jnp.einsum("buh,buhd->bhd", wu, kc)
+        return (C, n, m_end), hh
+
+    (Cf, nf, mf), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0),
+        (resh(qh), resh(kh), resh(vh), resh(log_i), resh(log_f)))
+    hh = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    return hh, (Cf, nf, mf)
+
+
+def mlstm_forward(p, cfg, h, return_state=False):
+    """Chunkwise-parallel mLSTM over a full sequence. h (B,S,d)."""
+    B, S, d = h.shape
+    H = cfg.n_heads
+    di = cfg.mlstm_d_inner
+    dh = di // H
+    x_in = cm.rmsnorm(h, p["ln"], cfg.norm_eps)
+
+    def conv(x):
+        pad = jnp.pad(x, ((0, 0), (CONV - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+                  for i in range(CONV)) + p["conv_b"]
+        return jax.nn.silu(out)
+
+    q, k, v, log_i, log_f, z, x_raw = _mlstm_project(p, cfg, x_in, conv)
+    qh = _heads(cfg, q).astype(jnp.float32)         # (B,S,H,dh)
+    kh = _heads(cfg, k).astype(jnp.float32) / (dh ** 0.5)
+    vh = _heads(cfg, v).astype(jnp.float32)
+
+    hh, (C, n, m_S) = _mlstm_chunked(qh, kh, vh, log_i, log_f)
+
+    y = hh.reshape(B, S, di).astype(h.dtype)
+    y = cm.rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = h + y @ p["down"]
+    if not return_state:
+        return out
+    conv_tail = x_raw[:, S - (CONV - 1):, :] if S >= CONV - 1 else \
+        jnp.pad(x_raw, ((0, 0), (CONV - 1 - S, 0), (0, 0)))
+    return out, (C, n, m_S, conv_tail)
+
+
+def mlstm_decode(p, cfg, h, C, n, m, conv_buf):
+    """One-token recurrent step. h (B,d); C (B,H,dh,dh); n (B,H,dh);
+    m (B,H); conv_buf (B,CONV-1,di)."""
+    B, d = h.shape
+    H = cfg.n_heads
+    di = cfg.mlstm_d_inner
+    dh = di // H
+    x_in = cm.rmsnorm(h, p["ln"], cfg.norm_eps)
+
+    store = {}
+
+    def conv(x):
+        window = jnp.concatenate([conv_buf, x[:, None, :]], axis=1)
+        store["window"] = window
+        out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        return jax.nn.silu(out)
+
+    q, k, v, log_i, log_f, z, x_raw = _mlstm_project(p, cfg, x_in, conv)
+    qh = _heads(cfg, q).astype(jnp.float32)         # (B,H,dh)
+    kh = _heads(cfg, k).astype(jnp.float32) / (dh ** 0.5)
+    vh = _heads(cfg, v).astype(jnp.float32)
+
+    m_new = jnp.maximum(log_f + m, log_i)           # (B,H)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", vh, kh)
+    n = f_s[..., None] * n + i_s[..., None] * kh
+    b = jnp.einsum("bhd,bhd->bh", n, qh)
+    denom = jnp.maximum(jnp.abs(b), jnp.exp(-m_new))
+    hh = jnp.einsum("bhde,bhe->bhd", C, qh) / denom[..., None]
+
+    y = hh.reshape(B, di).astype(h.dtype)
+    y = cm.rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return h + y @ p["down"], C, n, m_new, store["window"][:, 1:, :]
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln": cm.rmsnorm_init(d, dtype)[0],
+        "W": cm.dense_init(ks[0], d, (d, 4 * d), jnp.float32),
+        "r": (jax.random.normal(ks[1], (4, d)) * 0.1).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out": cm.dense_init(ks[2], d, (d, d), dtype),
+    }
+    s = {"ln": {"scale": P(None)}, "W": P(None, "model"), "r": P(None, None),
+         "b": P(None), "out": P(None, None)}
+    return p, s
+
+
+def _slstm_cell(p, cfg, pre, state):
+    """pre: (B,4d) = x @ W + b. state: (c, n, hs, m) each (B,d)."""
+    c, n, hs, m = state
+    d = cfg.d_model
+    pre = pre + jnp.concatenate(
+        [p["r"][g][None, :] * hs for g in range(4)], axis=-1)
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+    log_i = i_p
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * jnp.tanh(z_p)
+    n = f_s * n + i_s
+    hs = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, jnp.exp(-m_new))
+    return (c, n, hs, m_new)
+
+
+def slstm_forward(p, cfg, h, state=None):
+    """Sequence forward via lax.scan. h (B,S,d). Returns (out, state)."""
+    B, S, d = h.shape
+    x_in = cm.rmsnorm(h, p["ln"], cfg.norm_eps)
+    pre = x_in.astype(jnp.float32) @ p["W"] + p["b"]
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, d), -1e30, jnp.float32))
+
+    def step(st, pre_t):
+        st = _slstm_cell(p, cfg, pre_t, st)
+        return st, st[2]
+
+    state, ys = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(h.dtype)
+    return h + y @ p["out"], state
+
+
+def slstm_decode(p, cfg, h, state):
+    x_in = cm.rmsnorm(h, p["ln"], cfg.norm_eps)
+    pre = x_in.astype(jnp.float32) @ p["W"] + p["b"]
+    state = _slstm_cell(p, cfg, pre, state)
+    y = state[2].astype(h.dtype)
+    return h + y @ p["out"], state
+
+
+# ------------------------------------------------------------------- model
+def _layout(cfg):
+    """Groups of (n_mlstm, has_slstm) covering n_layers."""
+    out, i = [], 0
+    k = cfg.slstm_every
+    nm = 0
+    while i < cfg.n_layers:
+        if k and (i + 1) % k == 0:
+            out.append((nm, True))
+            nm = 0
+        else:
+            nm += 1
+        i += 1
+    if nm:
+        out.append((nm, False))
+    return out
+
+
+def n_mlstm(cfg):
+    return cfg.n_layers - (cfg.n_layers // cfg.slstm_every if cfg.slstm_every
+                           else 0)
+
+
+def n_slstm(cfg):
+    return cfg.n_layers // cfg.slstm_every if cfg.slstm_every else 0
+
+
+def init(key, cfg, max_seq: int = 4096):
+    dtype = cm.compute_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["emb"], s["emb"] = cm.embedding_init(ks[0], cfg, dtype)
+    p["mlstm"], s["mlstm"] = cm.stacked(
+        lambda k: mlstm_init(k, cfg, dtype), ks[1], n_mlstm(cfg))
+    if n_slstm(cfg):
+        p["slstm"], s["slstm"] = cm.stacked(
+            lambda k: slstm_init(k, cfg, dtype), ks[2], n_slstm(cfg))
+    p["ln_f"], s["ln_f"] = cm.rmsnorm_init(cfg.d_model, dtype)
+    return p, s
+
+
+def _slice(stacked_params, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], stacked_params)
+
+
+def _index(stacked_params, i):
+    return jax.tree.map(lambda a: a[i], stacked_params)
+
+
+def forward(params, cfg, batch: Dict):
+    tokens = batch["tokens"]
+    h = cm.embed_tokens(params["emb"], tokens)
+
+    def body(h, lp):
+        h2 = mlstm_forward(lp, cfg, h)
+        return constrain(h2, batch_axes(), None, None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    mi = si = 0
+    for nm, has_s in _layout(cfg):
+        if nm:
+            h, _ = jax.lax.scan(body_fn, h, _slice(params["mlstm"], mi, mi + nm))
+            mi += nm
+        if has_s:
+            h, _ = slstm_forward(_index(params["slstm"], si), cfg, h)
+            si += 1
+    h = cm.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = cm.unembed(params["emb"], cfg, h)
+    return constrain(logits, batch_axes(), None, "model"), 0.0
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    H, di = cfg.n_heads, cfg.mlstm_d_inner
+    dh = di // H
+    d = cfg.d_model
+    Lm, Ls = n_mlstm(cfg), n_slstm(cfg)
+    dp = ("data",)
+    B = batch_size
+    cache = {
+        "mC": jnp.zeros((Lm, B, H, dh, dh), jnp.float32),
+        "mn": jnp.zeros((Lm, B, H, dh), jnp.float32),
+        "mm": jnp.full((Lm, B, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((Lm, B, CONV - 1, di), dtype),
+        "sc": jnp.zeros((Ls, B, d), jnp.float32),
+        "sn": jnp.zeros((Ls, B, d), jnp.float32),
+        "sh": jnp.zeros((Ls, B, d), jnp.float32),
+        "sm": jnp.full((Ls, B, d), -1e30, jnp.float32),
+        "len": jnp.zeros((B,), jnp.int32),
+    }
+    specs = {
+        "mC": P(None, dp, "model", None, None),
+        "mn": P(None, dp, "model", None),
+        "mm": P(None, dp, "model"),
+        "conv": P(None, dp, None, "model"),
+        "sc": P(None, dp, None), "sn": P(None, dp, None),
+        "sh": P(None, dp, None), "sm": P(None, dp, None),
+        "len": P(dp),
+    }
+    return cache, specs
+
+
+def prefill(params, cfg, batch: Dict, last_pos=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = cm.embed_tokens(params["emb"], tokens)
+
+    def body(h, lp):
+        h2, st = mlstm_forward(lp, cfg, h, return_state=True)
+        return h2, st
+
+    mC, mn, mm, conv, sc, sn, sh, sm = [], [], [], [], [], [], [], []
+    mi = si = 0
+    for nm, has_s in _layout(cfg):
+        if nm:
+            h, (C, n, m, cv) = jax.lax.scan(
+                body, h, _slice(params["mlstm"], mi, mi + nm))
+            mC.append(C), mn.append(n), mm.append(m), conv.append(cv)
+            mi += nm
+        if has_s:
+            h, st = slstm_forward(_index(params["slstm"], si), cfg, h)
+            sc.append(st[0]), sn.append(st[1]), sh.append(st[2]), sm.append(st[3])
+            si += 1
+    hl = h[:, -1] if last_pos is None else \
+        jnp.take_along_axis(h, last_pos[:, None, None].astype(jnp.int32)
+                            .repeat(h.shape[-1], -1), axis=1)[:, 0]
+    hl = cm.rmsnorm(hl, params["ln_f"], cfg.norm_eps)
+    logits = cm.unembed(params["emb"], cfg, hl)
+    cache = {
+        "mC": jnp.concatenate(mC, 0), "mn": jnp.concatenate(mn, 0),
+        "mm": jnp.concatenate(mm, 0), "conv": jnp.concatenate(conv, 0),
+        "sc": jnp.stack(sc, 0), "sn": jnp.stack(sn, 0),
+        "sh": jnp.stack(sh, 0), "sm": jnp.stack(sm, 0),
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    B = tokens.shape[0]
+    h = cm.embed_tokens(params["emb"], tokens)
+
+    def body(h, xs):
+        lp, C, n, m, cb = xs
+        h2, C, n, m, cb = mlstm_decode(lp, cfg, h, C, n, m, cb)
+        return h2, (C, n, m, cb)
+
+    mC, mn, mm, conv = [], [], [], []
+    sc, sn, sh, sm = [], [], [], []
+    mi = si = 0
+    for nm, has_s in _layout(cfg):
+        if nm:
+            xs = (_slice(params["mlstm"], mi, mi + nm), cache["mC"][mi:mi + nm],
+                  cache["mn"][mi:mi + nm], cache["mm"][mi:mi + nm],
+                  cache["conv"][mi:mi + nm])
+            h, (C, n, m, cb) = jax.lax.scan(body, h, xs)
+            mC.append(C), mn.append(n), mm.append(m), conv.append(cb)
+            mi += nm
+        if has_s:
+            st = (cache["sc"][si], cache["sn"][si], cache["sh"][si],
+                  cache["sm"][si])
+            h, st = slstm_decode(_index(params["slstm"], si), cfg, h, st)
+            sc.append(st[0]), sn.append(st[1]), sh.append(st[2]), sm.append(st[3])
+            si += 1
+    h = cm.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = cm.unembed(params["emb"], cfg, h)
+    new_cache = {
+        "mC": jnp.concatenate(mC, 0), "mn": jnp.concatenate(mn, 0),
+        "mm": jnp.concatenate(mm, 0), "conv": jnp.concatenate(conv, 0),
+        "sc": jnp.stack(sc, 0), "sn": jnp.stack(sn, 0),
+        "sh": jnp.stack(sh, 0), "sm": jnp.stack(sm, 0),
+        "len": cache["len"] + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,181 @@
+"""Cluster runtime: epoch-loop orchestration (paper §5.1 instance
+life-cycle + §6.1 evaluation protocol).
+
+Every epoch: estimate demand, read availability, re-solve allocation
+(Coral ILP or a baseline), reconcile the running cluster (graceful drain
+on scale-down, INIT_DELAY on scale-up), then advance the event simulator
+through the epoch while accounting hourly cost (provisioning + amortized
+initialization).
+
+Fault tolerance: ``fail_instance`` kills a running instance (node
+failure); its in-flight decode requests are re-routed and the next epoch
+re-solve replaces the capacity — the online allocator *is* the recovery
+mechanism (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.allocator import AllocProblem, Allocation, Demand
+from repro.core.hardware import NodeConfig, Region
+from repro.core.modelspec import ServedModel
+from repro.core.templates import TemplateLibrary
+from repro.simulator.sim import INIT_DELAY_S, SimInstance, Simulator
+from repro.traces.workloads import Request
+
+
+@dataclass
+class EpochMetrics:
+    epoch: int
+    cost_per_hour: float
+    init_cost: float
+    goodput: Dict[str, float]
+    throughput: Dict[str, float]
+    n_instances: int
+    n_new: int
+    n_drained: int
+    solve_seconds: float
+    unmet: Dict
+
+
+@dataclass
+class RunResult:
+    epochs: List[EpochMetrics] = field(default_factory=list)
+
+    def avg_cost(self) -> float:
+        return sum(e.cost_per_hour for e in self.epochs) / len(self.epochs)
+
+    def avg_goodput(self, model: str) -> float:
+        return sum(e.goodput[model] for e in self.epochs) / len(self.epochs)
+
+
+AllocatorFn = Callable[[AllocProblem], Allocation]
+
+
+class ClusterRuntime:
+    def __init__(self, models: Dict[str, ServedModel],
+                 regions: Sequence[Region], configs: Sequence[NodeConfig],
+                 library: TemplateLibrary, allocator_fn: AllocatorFn,
+                 workloads: Dict, epoch_s: float = 360.0,
+                 init_amortize_s: float = 3600.0,
+                 allocator_time_limit: float = 60.0):
+        self.models = models
+        self.regions = regions
+        self.configs = configs
+        self.library = library
+        self.allocator_fn = allocator_fn
+        self.workloads = workloads
+        self.epoch_s = epoch_s
+        self.init_k = INIT_DELAY_S / init_amortize_s
+        self.time_limit = allocator_time_limit
+        self.sim = Simulator(models, {c.name: c for c in configs}, workloads)
+        self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _held_nodes(self) -> Dict[Tuple[str, str], int]:
+        held: Dict[Tuple[str, str], int] = {}
+        for (region, key), insts in self.running.items():
+            live = [i for i in insts if not i.dead and not i.draining]
+            for inst in live:
+                for c, n in inst.template.counts:
+                    held[(region, c)] = held.get((region, c), 0) + n
+        return held
+
+    def _current_counts(self) -> Dict[Tuple[str, Tuple], int]:
+        return {k: len([i for i in v if not i.dead and not i.draining])
+                for k, v in self.running.items()}
+
+    def reconcile(self, alloc: Allocation) -> Tuple[int, int, float]:
+        """Scale instances toward the target allocation. Returns
+        (n_new, n_drained, init_cost_per_hour_amortized)."""
+        n_new = n_drained = 0
+        init_cost = 0.0
+        cfg = self.library.config_by_name
+        targets = dict(alloc.instances)
+        # scale down / drain extras (lowest load first, §5.1)
+        for key, insts in list(self.running.items()):
+            live = [i for i in insts if not i.dead and not i.draining]
+            tgt = targets.get(key, 0)
+            if len(live) > tgt:
+                live.sort(key=lambda i: len(i.queue) + len(i.resident))
+                for inst in live[:len(live) - tgt]:
+                    self.sim.drain_instance(inst)
+                    n_drained += 1
+        # scale up
+        for (region_name, tkey), tgt in targets.items():
+            key = (region_name, tkey)
+            live = [i for i in self.running.get(key, [])
+                    if not i.dead and not i.draining]
+            template = alloc.templates[tkey]
+            region = next(r for r in self.regions if r.name == region_name)
+            for _ in range(tgt - len(live)):
+                inst = self.sim.add_instance(region_name, template)
+                self.running.setdefault(key, []).append(inst)
+                n_new += 1
+                init_cost += template.cost(region, cfg) * self.init_k
+        return n_new, n_drained, init_cost
+
+    def fail_instance(self, rng: random.Random) -> Optional[SimInstance]:
+        """Kill one random live instance (node-failure injection)."""
+        live = [i for i in self.sim.instances.values()
+                if not i.dead and not i.draining]
+        if not live:
+            return None
+        inst = rng.choice(live)
+        inst.dead = True
+        # re-route its in-flight decode work
+        for req, _ in inst.resident:
+            self.sim.ev.push(self.sim.now, self.sim._join_decode, inst, req)
+        inst.resident = []
+        for req in inst.queue:
+            self.sim.ev.push(self.sim.now, self.sim._on_arrival, req)
+        inst.queue = []
+        return inst
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: List[Request],
+            availability_per_epoch: List[Dict[Tuple[str, str], int]],
+            demands_per_epoch: List[List[Demand]],
+            fail_rate_per_epoch: float = 0.0, seed: int = 0) -> RunResult:
+        rng = random.Random(seed)
+        for r in requests:
+            self.sim.submit(r)
+        result = RunResult()
+        n_epochs = len(availability_per_epoch)
+        for e in range(n_epochs):
+            t0 = e * self.epoch_s
+            t1 = t0 + self.epoch_s
+            held = self._held_nodes()
+            avail = dict(availability_per_epoch[e])
+            for k, n in held.items():
+                avail[k] = avail.get(k, 0) + n      # we keep what we hold
+            prob = AllocProblem(
+                self.regions, self.configs, avail, demands_per_epoch[e],
+                self.library, current=self._current_counts(),
+                init_penalty_k=self.init_k, time_limit=self.time_limit)
+            alloc = self.allocator_fn(prob)
+            n_new, n_drained, init_cost = self.reconcile(alloc)
+            if fail_rate_per_epoch > 0 and rng.random() < fail_rate_per_epoch:
+                self.fail_instance(rng)
+            self.sim.run_until(t1)
+            # provisioning cost of the live cluster
+            cfg = self.library.config_by_name
+            cost = 0.0
+            for (region_name, tkey), insts in self.running.items():
+                region = next(r for r in self.regions
+                              if r.name == region_name)
+                live = [i for i in insts if not i.dead]
+                for inst in live:
+                    cost += inst.template.cost(region, cfg)
+            result.epochs.append(EpochMetrics(
+                epoch=e, cost_per_hour=cost + init_cost, init_cost=init_cost,
+                goodput={m: self.sim.goodput(m, t0, t1) for m in self.models},
+                throughput={m: self.sim.throughput(m, t0, t1)
+                            for m in self.models},
+                n_instances=len([i for i in self.sim.instances.values()
+                                 if not i.dead]),
+                n_new=n_new, n_drained=n_drained,
+                solve_seconds=alloc.solve_seconds, unmet=alloc.unmet))
+        return result

@@ -1,0 +1,246 @@
+"""Event-based multi-LLM serving simulator (paper §5.2, §6.2).
+
+Faithful to the Coral runtime design (Fig. 5): a coordinator hosts the
+router (weighted round-robin by template throughput, with EWMA straggler
+feedback); each Serving Instance runs chunked-prefill or
+continuous-batching decode iterations whose durations come from the
+stage-granularity cost model; KV caches are transferred prefill->decode
+with a bandwidth/latency model; scale-down drains, scale-up pays an
+initialization delay.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.hardware import NodeConfig, Region
+from repro.core.modelspec import ServedModel
+from repro.core.templates import ServingTemplate
+from repro.simulator.costmodel import InstanceCostModel
+from repro.traces.workloads import Request
+
+INIT_DELAY_S = 90.0           # node start + weight load + warmup (§5.1)
+
+
+class EventQueue:
+    def __init__(self):
+        self._q: List = []
+        self._c = itertools.count()
+
+    def push(self, t: float, fn: Callable, *args):
+        heapq.heappush(self._q, (t, next(self._c), fn, args))
+
+    def pop(self):
+        return heapq.heappop(self._q)
+
+    def __bool__(self):
+        return bool(self._q)
+
+
+@dataclass
+class TokenRecord:
+    t: float
+    latency: float
+    ok: bool
+
+
+class SimInstance:
+    """One Serving Instance (prefill or decode role)."""
+
+    def __init__(self, iid: int, region: str, template: ServingTemplate,
+                 model: ServedModel, cm: InstanceCostModel, ready_at: float):
+        self.iid = iid
+        self.region = region
+        self.template = template
+        self.model = model
+        self.cm = cm
+        self.ready_at = ready_at
+        self.draining = False
+        self.dead = False
+        self.busy = False
+        self.queue: List[Request] = []          # prefill queue
+        self.resident: List[Tuple[Request, int]] = []  # decode (req, emitted)
+        self.ewma_load = 0.0
+
+    @property
+    def phase(self) -> str:
+        return self.template.phase
+
+    @property
+    def weight(self) -> float:
+        return self.template.throughput / (1.0 + self.ewma_load)
+
+    def idle(self) -> bool:
+        return not self.queue and not self.resident and not self.busy
+
+
+class Simulator:
+    def __init__(self, models: Dict[str, ServedModel],
+                 config_by_name: Dict[str, NodeConfig],
+                 workloads: Dict[str, "WorkloadStats"]):
+        self.models = models
+        self.configs = config_by_name
+        self.workloads = workloads
+        self.ev = EventQueue()
+        self.now = 0.0
+        self._iid = itertools.count()
+        self.instances: Dict[int, SimInstance] = {}
+        self.tokens: Dict[str, List[TokenRecord]] = {m: [] for m in models}
+        self.prefill_lat: Dict[str, List[float]] = {m: [] for m in models}
+        self.finished: List[Request] = []
+        self.dropped: int = 0
+
+    # ------------------------------------------------------------ cluster
+    def add_instance(self, region: str, template: ServingTemplate,
+                     ready_delay: float = INIT_DELAY_S,
+                     cm: Optional[object] = None) -> SimInstance:
+        """cm: override the cost model (e.g. a profiling-fitted one for the
+        simulator-fidelity study, §6.2)."""
+        model = self.models[template.model]
+        if cm is None:
+            cm = InstanceCostModel(model, template.phase, template.placement,
+                                   self.configs,
+                                   self.workloads[template.model])
+        inst = SimInstance(next(self._iid), region, template, model, cm,
+                           self.now + ready_delay)
+        self.instances[inst.iid] = inst
+        return inst
+
+    def drain_instance(self, inst: SimInstance):
+        inst.draining = True
+
+    def pool(self, model: str, phase: str) -> List[SimInstance]:
+        return [i for i in self.instances.values()
+                if i.template.model == model and i.phase == phase
+                and not i.draining and not i.dead
+                and i.ready_at <= self.now + 1e-9]
+
+    # ------------------------------------------------------------- router
+    def route(self, model: str, phase: str) -> Optional[SimInstance]:
+        pool = self.pool(model, phase)
+        if not pool:
+            return None
+        # weighted selection: least (queue depth / weight) — weighted-RR
+        # with EWMA straggler correction (DESIGN.md §8)
+        def load(i: SimInstance) -> float:
+            depth = len(i.queue) + len(i.resident)
+            return (depth + 1.0) / max(i.weight, 1e-9)
+        return min(pool, key=load)
+
+    # ------------------------------------------------------------ arrival
+    def submit(self, req: Request):
+        self.ev.push(req.arrival, self._on_arrival, req)
+
+    def _on_arrival(self, req: Request):
+        inst = self.route(req.model, "prefill")
+        if inst is None:
+            self.dropped += 1
+            return
+        inst.queue.append(req)
+        self._maybe_start(inst)
+
+    # ------------------------------------------------------------ prefill
+    def _maybe_start(self, inst: SimInstance):
+        if inst.busy or inst.dead or self.now < inst.ready_at:
+            if not inst.busy and not inst.dead and self.now < inst.ready_at \
+                    and (inst.queue or inst.resident):
+                self.ev.push(inst.ready_at, self._maybe_start, inst)
+            return
+        if inst.phase == "prefill" and inst.queue:
+            batch, tokens = [], 0
+            while inst.queue and tokens < inst.cm.prefill_chunk:
+                r = inst.queue.pop(0)
+                batch.append(r)
+                tokens += r.prompt_len
+            # successive iterations pipeline across stages: the instance
+            # re-admits after the bottleneck-stage time, while the batch
+            # completes after the full pipeline traversal.
+            free = inst.cm.prefill_iter_time(tokens)
+            done = inst.cm.prefill_pipeline_latency(tokens)
+            inst.busy = True
+            inst.ewma_load = 0.9 * inst.ewma_load + 0.1 * len(inst.queue)
+            self.ev.push(self.now + free, self._free, inst)
+            self.ev.push(self.now + done, self._prefill_done, inst, batch)
+        elif inst.phase == "decode" and (inst.resident or inst.queue):
+            while inst.queue and len(inst.resident) < inst.cm.decode_capacity:
+                inst.resident.append((inst.queue.pop(0), 0))
+            b = len(inst.resident)
+            free = inst.cm.decode_iter_time(b)
+            lat = inst.cm.decode_pipeline_latency(b)
+            inst.busy = True
+            self.ev.push(self.now + free, self._decode_done, inst, lat)
+
+    def _free(self, inst: SimInstance):
+        inst.busy = False
+        self._maybe_start(inst)
+
+    def _prefill_done(self, inst: SimInstance, batch: List[Request]):
+        for r in batch:
+            r.prefill_done = self.now
+            self.prefill_lat[r.model].append(self.now - r.arrival)
+            # KV transfer to a decode instance
+            dst = self.route(r.model, "decode")
+            if dst is None:
+                self.dropped += 1
+                continue
+            delay = inst.cm.kv_transfer_time(r.prompt_len)
+            self.ev.push(self.now + delay, self._join_decode, dst, r)
+
+    # ------------------------------------------------------------- decode
+    def _join_decode(self, inst: SimInstance, req: Request):
+        if inst.dead:
+            inst2 = self.route(req.model, "decode")
+            if inst2 is None:
+                self.dropped += 1
+                return
+            inst = inst2
+        if len(inst.resident) < inst.cm.decode_capacity:
+            inst.resident.append((req, 0))
+        else:
+            inst.queue.append(req)      # SLO-aware admission control
+        self._maybe_start(inst)
+
+    def _decode_done(self, inst: SimInstance, lat: float):
+        inst.busy = False
+        slo = inst.model.decode_slo_ms / 1e3
+        ok = lat <= slo
+        still = []
+        for req, emitted in inst.resident:
+            emitted += 1
+            self.tokens[req.model].append(TokenRecord(self.now, lat, ok))
+            if ok:
+                req.decode_slo_ok += 1
+            req.decode_tokens_ok += 1
+            if emitted >= req.output_len:
+                req.finish = self.now
+                self.finished.append(req)
+            else:
+                still.append((req, emitted))
+        cap = inst.cm.decode_capacity
+        inst.resident = still
+        # admit pending requests up to the SLO/memory cap
+        while inst.queue and len(inst.resident) < cap:
+            inst.resident.append((inst.queue.pop(0), 0))
+        if inst.draining and not inst.resident and not inst.queue:
+            inst.dead = True
+        self._maybe_start(inst)
+
+    # ---------------------------------------------------------------- run
+    def run_until(self, t_end: float):
+        while self.ev and self.ev._q[0][0] <= t_end:
+            t, _, fn, args = self.ev.pop()
+            self.now = max(self.now, t)
+            fn(*args)
+        self.now = t_end
+
+    # ------------------------------------------------------------ metrics
+    def goodput(self, model: str, t0: float, t1: float) -> float:
+        """Generated tokens/s within [t0, t1) meeting the decode SLO."""
+        recs = [r for r in self.tokens[model] if t0 <= r.t < t1 and r.ok]
+        return len(recs) / max(t1 - t0, 1e-9)
+
+    def throughput(self, model: str, t0: float, t1: float) -> float:
+        recs = [r for r in self.tokens[model] if t0 <= r.t < t1]
+        return len(recs) / max(t1 - t0, 1e-9)

@@ -1,0 +1,261 @@
+"""Generic MILP substrate.
+
+A tiny modeling API (variables / linear constraints / objective) with two
+backends:
+  * scipy.optimize.milp (HiGHS) — default, exact, scales to the online
+    allocator's ~10^5-variable instances;
+  * a pure-numpy branch-and-bound over a dense-simplex LP relaxation —
+    dependency-free fallback for small problems, cross-checked against
+    HiGHS in tests/test_solver.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+try:
+    from scipy import sparse
+    from scipy.optimize import Bounds, LinearConstraint, milp
+    HAVE_SCIPY = True
+except Exception:                                     # pragma: no cover
+    HAVE_SCIPY = False
+
+
+@dataclass
+class MilpModel:
+    """minimize c.x  s.t.  lb_i <= A_i.x <= ub_i, bounds, integrality."""
+    obj: List[float] = field(default_factory=list)
+    lb: List[float] = field(default_factory=list)
+    ub: List[float] = field(default_factory=list)
+    integer: List[bool] = field(default_factory=list)
+    rows: List[Dict[int, float]] = field(default_factory=list)
+    row_lb: List[float] = field(default_factory=list)
+    row_ub: List[float] = field(default_factory=list)
+
+    def add_var(self, obj: float = 0.0, lb: float = 0.0,
+                ub: float = np.inf, integer: bool = False) -> int:
+        self.obj.append(obj)
+        self.lb.append(lb)
+        self.ub.append(ub)
+        self.integer.append(integer)
+        return len(self.obj) - 1
+
+    def add_constr(self, coeffs: Dict[int, float], lb: float = -np.inf,
+                   ub: float = np.inf) -> int:
+        self.rows.append(coeffs)
+        self.row_lb.append(lb)
+        self.row_ub.append(ub)
+        return len(self.rows) - 1
+
+    @property
+    def n(self) -> int:
+        return len(self.obj)
+
+    def _matrix(self):
+        data, ri, ci = [], [], []
+        for i, row in enumerate(self.rows):
+            for j, v in row.items():
+                ri.append(i)
+                ci.append(j)
+                data.append(v)
+        return data, ri, ci
+
+    # ---------------------------------------------------------- backends
+    def solve(self, time_limit: float = 120.0, gap: float = 1e-6,
+              backend: str = "auto"):
+        if backend == "numpy" or (backend == "auto" and not HAVE_SCIPY):
+            return self._solve_bb(time_limit)
+        return self._solve_scipy(time_limit, gap)
+
+    def _solve_scipy(self, time_limit: float, gap: float):
+        t0 = time.time()
+        data, ri, ci = self._matrix()
+        A = sparse.csr_matrix((data, (ri, ci)), shape=(len(self.rows), self.n))
+        cons = LinearConstraint(A, np.array(self.row_lb), np.array(self.row_ub))
+        res = milp(
+            c=np.array(self.obj),
+            constraints=cons,
+            integrality=np.array(self.integer, dtype=np.uint8),
+            bounds=Bounds(np.array(self.lb), np.array(self.ub)),
+            options={"time_limit": time_limit, "mip_rel_gap": gap,
+                     "presolve": True},
+        )
+        ok = res.status == 0 and res.x is not None
+        return SolveResult(ok, res.x if ok else None,
+                           res.fun if ok else np.inf, time.time() - t0,
+                           res.status)
+
+    # -------------------------------------------- numpy branch-and-bound
+    def _lp_relax(self, extra_lb, extra_ub):
+        """Dense LP relaxation via scipy-free projected subgradient is too
+        weak; use a simple big-M simplex on the standard form. Suitable
+        only for small models (tests)."""
+        # convert to: min c x, A_eq x = b (with slacks), x >= 0, x <= ub
+        n = self.n
+        lb = np.maximum(self.lb, extra_lb)
+        ub = np.minimum(self.ub, extra_ub)
+        if np.any(lb > ub + 1e-12):
+            return None, np.inf
+        rows, rl, ru = [], [], []
+        for row, l, u in zip(self.rows, self.row_lb, self.row_ub):
+            dense = np.zeros(n)
+            for j, v in row.items():
+                dense[j] = v
+            if u < np.inf:
+                rows.append(dense.copy())
+                rl.append(-np.inf)
+                ru.append(u)
+            if l > -np.inf:
+                rows.append(-dense)
+                rl.append(-np.inf)
+                ru.append(-l)
+        # shift x = y + lb, y in [0, ub-lb]
+        shift = np.where(np.isfinite(lb), lb, 0.0)
+        span = ub - shift
+        A, b = [], []
+        for dense, u in zip(rows, ru):
+            A.append(dense)
+            b.append(u - dense @ shift)
+        for j in range(n):
+            if np.isfinite(span[j]):
+                e = np.zeros(n)
+                e[j] = 1.0
+                A.append(e)
+                b.append(span[j])
+        A = np.array(A) if A else np.zeros((0, n))
+        b = np.array(b) if b else np.zeros((0,))
+        y, obj = _simplex_min(np.array(self.obj), A, b)
+        if y is None:
+            return None, np.inf
+        return y + shift, obj + np.dot(self.obj, shift)
+
+    def _solve_bb(self, time_limit: float):
+        t0 = time.time()
+        best_x, best_obj = None, np.inf
+        n = self.n
+        stack = [(np.full(n, -np.inf), np.full(n, np.inf))]
+        while stack and time.time() - t0 < time_limit:
+            elb, eub = stack.pop()
+            x, obj = self._lp_relax(elb, eub)
+            if x is None or obj >= best_obj - 1e-9:
+                continue
+            frac_j, frac_v = -1, 0.0
+            for j in range(n):
+                if self.integer[j]:
+                    f = abs(x[j] - round(x[j]))
+                    if f > 1e-6 and f > frac_v:
+                        frac_j, frac_v = j, f
+            if frac_j < 0:
+                if obj < best_obj:
+                    best_obj, best_x = obj, x.copy()
+                continue
+            lo = np.floor(x[frac_j])
+            l1, u1 = elb.copy(), eub.copy()
+            u1[frac_j] = min(u1[frac_j], lo)
+            l2, u2 = elb.copy(), eub.copy()
+            l2[frac_j] = max(l2[frac_j], lo + 1)
+            stack.append((l1, u1))
+            stack.append((l2, u2))
+        ok = best_x is not None
+        return SolveResult(ok, best_x, best_obj, time.time() - t0,
+                           0 if ok else 2)
+
+
+@dataclass
+class SolveResult:
+    ok: bool
+    x: Optional[np.ndarray]
+    obj: float
+    seconds: float
+    status: int
+
+
+def _simplex_min(c, A, b) -> Tuple[Optional[np.ndarray], float]:
+    """min c.x s.t. A x <= b, x >= 0 — two-phase dense simplex (small)."""
+    m, n = A.shape
+    # add slacks
+    T = np.hstack([A, np.eye(m), b.reshape(-1, 1)])
+    # make b >= 0 via artificial handling: if b_i < 0, phase-1 needed;
+    # for our test-scale problems all b >= 0 after shifting. Guard:
+    if np.any(b < -1e-9):
+        # phase 1 with artificials
+        neg = b < 0
+        T[neg, :] *= -1
+        n_art = int(neg.sum())
+        art = np.zeros((m, n_art))
+        k = 0
+        for i in range(m):
+            if neg[i]:
+                art[i, k] = 1.0
+                k += 1
+        T = np.hstack([T[:, :-1], art, T[:, -1:]])
+        cost1 = np.zeros(T.shape[1] - 1)
+        cost1[n + m:] = 1.0
+        basis = []
+        k = 0
+        for i in range(m):
+            if neg[i]:
+                basis.append(n + m + k)
+                k += 1
+            else:
+                basis.append(n + i)
+        T, basis, ok = _pivot_loop(T, np.array(basis), cost1)
+        if not ok or _objective(T, basis, cost1) > 1e-7:
+            return None, np.inf
+        # pivot remaining (zero-level) artificials out of the basis
+        for i in range(m):
+            if basis[i] >= n + m:
+                row = T[i, :n + m]
+                js = np.flatnonzero(np.abs(row) > 1e-9)
+                if len(js):
+                    j = int(js[0])
+                    T[i, :] /= T[i, j]
+                    for r in range(m):
+                        if r != i and abs(T[r, j]) > 1e-12:
+                            T[r, :] -= T[r, j] * T[i, :]
+                    basis[i] = j
+        keep = basis < n + m
+        T = np.hstack([T[keep][:, :n + m], T[keep][:, -1:]])
+        basis = basis[keep]
+        m = T.shape[0]
+    else:
+        basis = np.array([n + i for i in range(m)])
+    n_cols = T.shape[1] - 1
+    cost = np.concatenate([c, np.zeros(n_cols - n)])
+    T, basis, ok = _pivot_loop(T, basis, cost)
+    if not ok:
+        return None, np.inf
+    x = np.zeros(n_cols)
+    x[basis] = T[:, -1]
+    return x[:n], float(cost @ x)
+
+
+def _objective(T, basis, cost):
+    x = np.zeros(T.shape[1] - 1)
+    x[basis] = T[:, -1]
+    return float(cost @ x)
+
+
+def _pivot_loop(T, basis, cost, max_iter=2000):
+    m = T.shape[0]
+    for _ in range(max_iter):
+        cb = cost[basis]
+        red = cost[: T.shape[1] - 1] - cb @ T[:, :-1]
+        j = int(np.argmin(red))
+        if red[j] >= -1e-9:
+            return T, basis, True
+        col = T[:, j]
+        pos = col > 1e-12
+        if not np.any(pos):
+            return T, basis, False          # unbounded
+        ratios = np.where(pos, T[:, -1] / np.where(pos, col, 1.0), np.inf)
+        i = int(np.argmin(ratios))
+        T[i, :] /= T[i, j]
+        for r in range(m):
+            if r != i and abs(T[r, j]) > 1e-12:
+                T[r, :] -= T[r, j] * T[i, :]
+        basis[i] = j
+    return T, basis, False

@@ -1,0 +1,87 @@
+"""Pure-JAX AdamW with global-norm clipping and LR schedules
+(cosine default; WSD warmup-stable-decay for minicpm-2b per its paper).
+Optimizer moments inherit the parameter PartitionSpecs (so FSDP archs
+get ZeRO-style sharded optimizer state for free)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | wsd
+    wsd_decay_frac: float = 0.1
+
+
+def lr_at(oc: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    if oc.schedule == "wsd":
+        decay_start = oc.total_steps * (1.0 - oc.wsd_decay_frac)
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(oc.total_steps - decay_start, 1), 0, 1)
+        return oc.lr * warm * (1.0 - frac * (1.0 - 0.1))
+    prog = jnp.clip(step / jnp.maximum(oc.total_steps, 1), 0, 1)
+    return oc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs):
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
+    b1, b2 = oc.betas
+    lr = lr_at(oc, step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

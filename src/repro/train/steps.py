@@ -1,0 +1,59 @@
+"""train_step / prefill_step / serve_step factories.
+
+These are the programs the multi-pod dry-run lowers and the launchers
+execute. All three are pure functions of (params/opt_state, inputs) and
+jit-able under any mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api as model_api
+from repro.models import common as cm
+from repro.train import optimizer as opt
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict):
+    model = model_api.get_model(cfg)
+    logits, aux = model.forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # logits cover [vision tokens | text]; loss only on text targets
+        V = batch["vision_embeds"].shape[1]
+        logits = logits[:, V:]
+    # next-token prediction: logits[:, :-1] predict labels[:, 1:]
+    loss = cm.cross_entropy(logits[:, :-1], labels[:, 1:], cfg.vocab_size)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux
+    return loss, {"lm_loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, oc: opt.OptConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, om = opt.adamw_update(oc, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        model = model_api.get_model(cfg)
+        logits, cache = model.prefill(params, cfg, batch)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        model = model_api.get_model(cfg)
+        logits, cache = model.decode_step(params, cfg, cache, tokens)
+        return logits, cache
+    return serve_step

@@ -1,0 +1,99 @@
+"""Online allocator invariants (property-based where cheap)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import AllocProblem, Demand, allocate
+from repro.core.baselines import homo_allocate, cauchy_allocate, homo_library
+from repro.core.hardware import CORE_REGIONS, make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import build_library
+from repro.traces.workloads import workload_stats
+
+CONFIGS = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
+MODELS = [PAPER_MODELS["phi4-14b"], PAPER_MODELS["gpt-oss-20b"]]
+WLS = {m.name: workload_stats(m.trace) for m in MODELS}
+LIB = build_library(MODELS, CONFIGS, WLS, n_max=3, rho=8.0)
+HLIB = homo_library(MODELS, CONFIGS, WLS, n_max=3, rho=8.0)
+
+
+def _check_alloc(alloc, avail, demands):
+    # availability respected
+    used = {}
+    for (region, key), n in alloc.instances.items():
+        t = alloc.templates[key]
+        for c, k in t.counts:
+            used[(region, c)] = used.get((region, c), 0) + k * n
+    for k, v in used.items():
+        assert v <= avail.get(k, 0), (k, v, avail.get(k, 0))
+    # demand met or shortfall declared
+    for d in demands:
+        served = alloc.served(d.model, d.phase)
+        short = alloc.unmet.get((d.model, d.phase), 0.0)
+        assert served + short >= d.tokens_per_s - 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 30), st.floats(100, 3000))
+def test_allocation_invariants(seed, abundance, dec_demand):
+    rng = np.random.default_rng(seed)
+    avail = {(r.name, c.name): int(rng.integers(0, abundance))
+             for r in CORE_REGIONS for c in CONFIGS}
+    demands = []
+    for m in MODELS:
+        wl = WLS[m.name]
+        demands.append(Demand(m.name, "prefill",
+                              dec_demand * wl.avg_prompt / wl.avg_output))
+        demands.append(Demand(m.name, "decode", dec_demand))
+    alloc = allocate(AllocProblem(CORE_REGIONS, CONFIGS, avail, demands,
+                                  LIB, time_limit=30))
+    assert alloc.ok
+    _check_alloc(alloc, avail, demands)
+    for fn, lib in ((homo_allocate, HLIB), (cauchy_allocate, HLIB)):
+        a = fn(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                            lib, time_limit=30), lib)
+        _check_alloc(a, avail, demands)
+
+
+def test_coral_never_worse_than_homo():
+    """With the richer (superset) library and exact ILP, Coral's cost is
+    <= the greedy homogeneous baseline whenever both meet demand."""
+    avail = {(r.name, c.name): 40 for r in CORE_REGIONS for c in CONFIGS}
+    demands = []
+    for m in MODELS:
+        wl = WLS[m.name]
+        demands.append(Demand(m.name, "prefill", 10 * wl.avg_prompt))
+        demands.append(Demand(m.name, "decode", 10 * wl.avg_output))
+    coral = allocate(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
+                                  demands, LIB, time_limit=60))
+    homo = homo_allocate(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
+                                      demands, HLIB), HLIB)
+    assert coral.ok and not coral.unmet
+    if not homo.unmet:
+        assert coral.cost_per_hour <= homo.cost_per_hour + 1e-6
+
+
+def test_init_penalty_prefers_stability():
+    """Between equal-cost compositions, the solver keeps what runs."""
+    avail = {(r.name, c.name): 40 for r in CORE_REGIONS for c in CONFIGS}
+    demands = [Demand(MODELS[0].name, "decode", 500.0)]
+    prob = AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands, LIB,
+                        init_penalty_k=0.2, time_limit=30)
+    a1 = allocate(prob)
+    # re-solve declaring a1 as current: result should not add instances
+    prob2 = AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands, LIB,
+                         current=dict(a1.instances), init_penalty_k=0.2,
+                         time_limit=30)
+    a2 = allocate(prob2)
+    assert a2.init_penalty <= 1e-6
+    assert a2.instances == a1.instances
+
+
+def test_scarce_availability_reports_unmet():
+    avail = {(r.name, c.name): 0 for r in CORE_REGIONS for c in CONFIGS}
+    avail[(CORE_REGIONS[0].name, CONFIGS[0].name)] = 1
+    demands = [Demand(MODELS[0].name, "decode", 1e5)]
+    alloc = allocate(AllocProblem(CORE_REGIONS, CONFIGS, avail, demands,
+                                  LIB, time_limit=30))
+    assert alloc.ok
+    assert alloc.unmet.get((MODELS[0].name, "decode"), 0) > 0

@@ -1,0 +1,60 @@
+"""Loop-aware HLO cost analysis: trip-count scaling + dot accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyse_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = analyse_hlo(_compile(lambda x, y: x @ y, a, b).as_text())
+    assert c.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_count_scaling():
+    """flops must scale ~linearly with lax.scan length."""
+    w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((32, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+
+    def run(p, x0):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x0, p)
+        return h
+
+    f1 = analyse_hlo(_compile(run, w, x).as_text()).flops
+    f2 = analyse_hlo(_compile(run, w2, x).as_text()).flops
+    assert f2 / f1 == pytest.approx(4.0, rel=0.2), (f1, f2)
+    assert f1 >= 8 * 2 * 4 * 64 * 64          # at least the 8 matmuls
+
+
+def test_model_forward_matches_2nd():
+    """Dense LM forward ~ 2*N*D within 30% (attention/logits excess)."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models import api as mapi
+    cfg = get_smoke_config("qwen2-1.5b").with_(n_layers=4, remat=False)
+    model = mapi.get_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg)[0],
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32)}
+    compiled = _compile(lambda p, b: model.forward(p, cfg, b)[0],
+                        shapes, batch)
+    c = analyse_hlo(compiled.as_text())
+    expect = 2 * cfg.param_count() * 2 * 64
+    assert c.flops == pytest.approx(expect, rel=0.3)
+    assert c.traffic > 0
+
+
+def test_traffic_counts_operands_and_results():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = analyse_hlo(_compile(lambda x: x + 1.0, a).as_text())
+    # at least read + write of the 256KB tensor
+    assert c.traffic >= 2 * 256 * 256 * 4

@@ -1,0 +1,95 @@
+"""Placement solvers: the exact combinatorial optimizer must equal the
+paper-faithful ILP; placements must satisfy the problem invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (_multiset_partitions,
+                                  optimal_placement_exact,
+                                  optimal_placement_ilp)
+
+
+def _make_tables(names, L, seed):
+    r = np.random.default_rng(seed)
+    base = {n: r.uniform(10, 200) for n in set(names)}
+    cache = {}
+
+    def tables(name, S):
+        key = (name, S)
+        if key not in cache:
+            j = np.arange(1, L + 1)
+            v = base[name] / (j ** (0.7 + 0.05 * S))
+            cut = r.integers(max(L // 2, 1), L + 1)
+            v = np.where(j <= cut, v, 0.0)
+            cache[key] = np.minimum.accumulate(v)
+        return cache[key]
+
+    return tables
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(3, 8))
+def test_exact_equals_ilp(seed, K, L):
+    r = np.random.default_rng(seed)
+    pool = ["A", "B", "C"]
+    names = [pool[r.integers(0, 3)] for _ in range(K)]
+    tables = _make_tables(names, L, seed)
+    pe = optimal_placement_exact(names, tables, L)
+    pi = optimal_placement_ilp(names, tables, L)
+    te = pe.throughput if pe else 0.0
+    ti = pi.throughput if pi else 0.0
+    assert abs(te - ti) <= 1e-6 * max(te, ti, 1.0), (pe, pi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(3, 12))
+def test_placement_invariants(seed, K, L):
+    r = np.random.default_rng(seed)
+    pool = ["A", "B", "C", "D"]
+    names = [pool[r.integers(0, 4)] for _ in range(K)]
+    tables = _make_tables(names, L, seed)
+    pl = optimal_placement_exact(names, tables, L)
+    if pl is None:
+        return
+    # layers cover the model exactly, >=1 per stage
+    assert sum(pl.layer_counts) == L
+    assert all(j >= 1 for j in pl.layer_counts)
+    # every node used exactly once
+    used = sorted(n for g in pl.stage_nodes for n in g)
+    assert used == sorted(names)
+    # reported throughput == min stage throughput at the chosen layers
+    stage_t = []
+    for j, group in zip(pl.layer_counts, pl.stage_nodes):
+        stage_t.append(sum(tables(n, pl.n_stages)[j - 1] for n in group))
+    assert min(stage_t) >= pl.throughput - 1e-9
+
+
+def test_multiset_partitions_counts():
+    # 3 identical items: integer partitions of 3 -> 3
+    assert len(_multiset_partitions(("a", "a", "a"))) == 3
+    # 3 distinct items: Bell(3) = 5
+    assert len(_multiset_partitions(("a", "b", "c"))) == 5
+    # mixed
+    parts = _multiset_partitions(("a", "a", "b"))
+    assert len(parts) == 4
+
+
+def test_single_node_placement():
+    tab = np.array([60.0, 30, 20, 15, 12, 10])      # full support
+
+    def tables(name, S):
+        return tab
+
+    pl = optimal_placement_exact(["A"], tables, 6)
+    assert pl is not None and pl.n_stages == 1
+    assert pl.layer_counts == (6,)
+    assert pl.throughput == tab[5]
+
+
+def test_infeasible_returns_none():
+    tab = np.array([60.0, 30, 0, 0, 0, 0])          # >2 layers impossible
+
+    def tables(name, S):
+        return tab
+
+    assert optimal_placement_exact(["A"], tables, 6) is None

@@ -1,0 +1,70 @@
+"""Template generation: enumeration bounds, pruning losslessness."""
+import numpy as np
+import pytest
+
+from repro.core.hardware import CORE_CONFIGS, CORE_REGIONS, make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import (enumerate_combos, generate_templates,
+                                  pareto_prune, build_library)
+from repro.core.allocator import AllocProblem, Demand, allocate
+from repro.traces.workloads import workload_stats
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+
+
+def test_enumerate_combos_bounds():
+    for combo in enumerate_combos(CONFIGS, n_max=3, mem_lo_gb=20,
+                                  mem_hi_gb=200):
+        assert 1 <= len(combo) <= 3
+        mem = sum(c.mem_gb for c in combo)
+        assert 20 <= mem <= 200
+
+
+def test_generate_templates_valid():
+    temps, stats = generate_templates(MODEL, "decode", CONFIGS, WL,
+                                      n_max=3, rho=8.0)
+    assert temps, "no templates generated"
+    for t in temps:
+        assert t.throughput > 0
+        assert t.n_nodes <= 3
+        assert sum(t.placement.layer_counts) == MODEL.n_layers
+        mem = sum(next(c for c in CONFIGS if c.name == name).mem_gb * n
+                  for name, n in t.counts)
+        assert mem <= 8.0 * MODEL.bytes_total / 1e9 + 1e-9
+
+
+def test_pareto_prune_lossless_for_allocator():
+    """Optimal allocation cost must be unchanged by dominance pruning."""
+    temps, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=3,
+                                  rho=8.0, prune=False)
+    names = sorted({c.name for c in CONFIGS})
+    pruned = pareto_prune(temps, names)
+    assert len(pruned) <= len(temps)
+
+    from repro.core.templates import TemplateLibrary
+    avail = {(r.name, c.name): 6 for r in CORE_REGIONS for c in CONFIGS}
+    demands = [Demand(MODEL.name, "decode", 800.0)]
+
+    def solve(ts):
+        lib = TemplateLibrary(config_by_name={c.name: c for c in CONFIGS})
+        lib.add((MODEL.name, "decode"), ts, {})
+        prob = AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands, lib,
+                            time_limit=30)
+        return allocate(prob)
+
+    a1, a2 = solve(temps), solve(pruned)
+    assert a1.ok and a2.ok
+    assert not a1.unmet and not a2.unmet
+    assert abs(a1.cost_per_hour - a2.cost_per_hour) < 1e-6
+
+
+def test_recurrent_model_templates():
+    """SSM-backed served models get templates too (arch bridge)."""
+    from repro.core.modelspec import from_model_config
+    from repro.configs.registry import get_config
+    sm = from_model_config(get_config("zamba2-1.2b"))
+    temps, _ = generate_templates(sm, "decode", CONFIGS, WL, n_max=2,
+                                  rho=12.0)
+    assert temps

@@ -1,0 +1,62 @@
+"""Trace generators: determinism, statistics, availability walks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardware import CORE_CONFIGS, CORE_REGIONS
+from repro.traces.workloads import (TRACES, default_base_availability,
+                                    gen_availability, gen_requests,
+                                    workload_stats)
+
+
+def test_determinism():
+    a = gen_requests("m", "burstgpt", 5.0, 100.0, seed=7)
+    b = gen_requests("m", "burstgpt", 5.0, 100.0, seed=7)
+    assert [(r.arrival, r.prompt_len, r.output_len) for r in a] \
+        == [(r.arrival, r.prompt_len, r.output_len) for r in b]
+
+
+@pytest.mark.parametrize("trace", list(TRACES))
+def test_request_statistics(trace):
+    reqs = gen_requests("m", trace, rate=20.0, duration=600.0, seed=0)
+    spec = TRACES[trace]
+    # arrival rate within 15%
+    rate = len(reqs) / 600.0
+    assert abs(rate - 20.0) / 20.0 < 0.15
+    # mean lengths within 20% of spec
+    pm = np.mean([r.prompt_len for r in reqs])
+    om = np.mean([r.output_len for r in reqs])
+    assert abs(pm - spec.prompt_mean) / spec.prompt_mean < 0.2
+    assert abs(om - spec.output_mean) / spec.output_mean < 0.2
+    assert all(r.arrival < 600.0 for r in reqs)
+    assert all(r.prompt_len >= 8 and r.output_len >= 4 for r in reqs)
+
+
+def test_burstgpt_burstier_than_azure():
+    def cv(trace):
+        reqs = gen_requests("m", trace, 10.0, 1200.0, seed=1)
+        gaps = np.diff([r.arrival for r in reqs])
+        return gaps.std() / gaps.mean()
+
+    assert cv("burstgpt") > cv("azure_conv") * 1.3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 8))
+def test_availability_walk_bounds(seed, n_epochs):
+    base = default_base_availability(CORE_CONFIGS, abundance=20)
+    walks = gen_availability(CORE_REGIONS, CORE_CONFIGS, n_epochs, base,
+                             seed=seed)
+    assert len(walks) == n_epochs
+    for epoch in walks:
+        for (r, c), v in epoch.items():
+            assert v >= 0
+            assert isinstance(v, int)
+
+
+def test_workload_stats_consistent():
+    for trace, spec in TRACES.items():
+        wl = workload_stats(trace)
+        assert wl.avg_prompt == spec.prompt_mean
+        assert wl.avg_output == spec.output_mean
+        assert wl.avg_ctx_decode > wl.avg_prompt

@@ -1,0 +1,69 @@
+"""Perf-iteration harness: re-lower one (arch, shape) cell with a tagged
+variant (config overrides and/or code changes) and print the roofline
+terms next to the baseline.
+
+Usage:
+  PYTHONPATH=src:. python tools/perf_iter.py --arch granite-moe-3b-a800m \
+      --shape train_4k --tag sorted --override moe_impl=sorted
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (value eval'd)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = eval(v)          # noqa: S307 (trusted local tool)
+        except Exception:        # noqa: BLE001
+            pass
+        overrides[k] = v
+
+    from repro.launch import dryrun
+    rec = dryrun.run_cell(args.arch, args.shape,
+                          multi_pod=(args.mesh == "multi"),
+                          arch_overrides=overrides or None, tag=args.tag)
+    # attach correction
+    mesh_name = "2x16x16" if args.mesh == "multi" else "16x16"
+    cell = f"{args.arch}__{args.shape}__{mesh_name}__{args.tag}"
+    path = os.path.join(dryrun.ARTIFACT_DIR, cell + ".json")
+
+    from benchmarks import roofline as rl
+    base_path = os.path.join(dryrun.ARTIFACT_DIR,
+                             f"{args.arch}__{args.shape}__{mesh_name}.json")
+    with open(base_path) as f:
+        base = rl.analyse_cell(json.load(f))
+    with open(path) as f:
+        var_rec = json.load(f)
+    var = rl.analyse_cell(var_rec)
+
+    print(f"\n{'':14s} {'compute':>10} {'memory':>10} {'collective':>11} "
+          f"{'dominant':>9} {'roofl%':>7}")
+    for name, a in (("baseline", base), (args.tag, var)):
+        print(f"{name:14s} {a['t_compute']:10.4f} {a['t_memory']:10.4f} "
+              f"{a['t_collective']:11.4f} {a['dominant']:>9} "
+              f"{100*a['roofline_fraction']:7.1f}")
+    for term in ("t_compute", "t_memory", "t_collective"):
+        if base[term] > 0:
+            print(f"  {term}: {base[term]/max(var[term],1e-12):.2f}x better"
+                  if var[term] < base[term] else
+                  f"  {term}: {var[term]/max(base[term],1e-12):.2f}x WORSE")
+
+
+if __name__ == "__main__":
+    main()
