@@ -85,10 +85,19 @@ def allocate(p: AllocProblem) -> Allocation:
         # demand tightly, not just the best $/tok/s — then fill by
         # cost-efficiency.
         if len(temps) > p.max_templates_per_demand:
-            def mincost(t):
-                return min(t.cost(r, cfg_by_name) for r in p.regions)
-
-            by_cost = sorted(temps, key=lambda t: (mincost(t),
+            # hoist per-template min-region cost into one usage x price
+            # matmul instead of a per-sort-key loop over regions
+            cnames = sorted({c for t in temps for c, _ in t.counts})
+            cidx = {c: i for i, c in enumerate(cnames)}
+            usage = np.zeros((len(temps), len(cnames)))
+            for i, t in enumerate(temps):
+                for c, n in t.counts:
+                    usage[i, cidx[c]] = n
+            price = np.array([[r.node_usd_per_hour(cfg_by_name[c])
+                               for c in cnames] for r in p.regions])
+            mc = (usage @ price.T).min(axis=1)
+            mincost = {t.key: mc[i] for i, t in enumerate(temps)}
+            by_cost = sorted(temps, key=lambda t: (mincost[t.key],
                                                    -t.throughput))
             frontier, best_t = [], -1.0
             for t in by_cost:
@@ -98,7 +107,7 @@ def allocate(p: AllocProblem) -> Allocation:
             chosen = dict.fromkeys(frontier[:p.max_templates_per_demand])
             if len(chosen) < p.max_templates_per_demand:
                 def eff(t):
-                    return mincost(t) / max(t.throughput, 1e-9)
+                    return mincost[t.key] / max(t.throughput, 1e-9)
                 for t in sorted(temps, key=eff):
                     if len(chosen) >= p.max_templates_per_demand:
                         break

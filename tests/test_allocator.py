@@ -1,7 +1,10 @@
 """Online allocator invariants (property-based where cheap)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no network in this container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.allocator import AllocProblem, Demand, allocate
 from repro.core.baselines import homo_allocate, cauchy_allocate, homo_library

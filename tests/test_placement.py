@@ -2,7 +2,10 @@
 paper-faithful ILP; placements must satisfy the problem invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no network in this container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.placement import (_multiset_partitions,
                                   optimal_placement_exact,

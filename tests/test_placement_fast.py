@@ -1,0 +1,149 @@
+"""Fast placement path: equivalence with the reference exact solver,
+golden template-set equality, and PlacementCache / incremental-library
+behavior."""
+import numpy as np
+import pytest
+
+from repro.core.hardware import make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.placement import (PlacementCache, _partitions_by_shape,
+                                  optimal_placement_exact,
+                                  optimal_placement_fast)
+from repro.core.templates import build_library, generate_templates
+from repro.traces.workloads import workload_stats
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+
+
+def _make_tables(names, L, seed):
+    r = np.random.default_rng(seed)
+    base = {n: r.uniform(10, 200) for n in set(names)}
+    cache = {}
+
+    def tables(name, S):
+        key = (name, S)
+        if key not in cache:
+            j = np.arange(1, L + 1)
+            v = base[name] / (j ** (0.7 + 0.05 * S))
+            cut = r.integers(max(L // 2, 1), L + 1)
+            v = np.where(j <= cut, v, 0.0)
+            cache[key] = np.minimum.accumulate(v)
+        return cache[key]
+
+    return tables
+
+
+def test_fast_equals_exact_randomized():
+    """Same optimal throughput (bit-identical) and a valid layer split on
+    randomized instances, with and without a max_stages cap."""
+    for seed in range(120):
+        r = np.random.default_rng(seed)
+        K = int(r.integers(1, 7))
+        L = int(r.integers(2, 13))
+        ms = int(r.integers(1, 5)) if seed % 3 == 0 else None
+        pool = ["A", "B", "C", "D"]
+        names = [pool[r.integers(0, 4)] for _ in range(K)]
+        tables = _make_tables(names, L, seed)
+        pe = optimal_placement_exact(names, tables, L, max_stages=ms)
+        pf = optimal_placement_fast(names, tables, L, max_stages=ms)
+        te = pe.throughput if pe else 0.0
+        tf = pf.throughput if pf else 0.0
+        assert te == tf, (seed, names, L, ms, te, tf)
+        if pf is None:
+            continue
+        assert sum(pf.layer_counts) == L
+        assert all(j >= 1 for j in pf.layer_counts)
+        assert sorted(n for g in pf.stage_nodes for n in g) == sorted(names)
+        stage_t = [sum(tables(n, pf.n_stages)[j - 1] for n in g)
+                   for j, g in zip(pf.layer_counts, pf.stage_nodes)]
+        assert min(stage_t) >= pf.throughput - 1e-12
+
+
+def test_cache_reuse_across_combos():
+    """One shared cache must return the same results as fresh solves."""
+    L = 10
+    tables = _make_tables(["A", "B", "C"], L, 7)
+    cache = PlacementCache(tables, L)
+    combos = [["A"], ["A", "B"], ["A", "A", "B"], ["B", "C", "C"],
+              ["A", "B", "C"], ["A", "A", "B", "C"], ["A", "B"], ["A"]]
+    for names in combos:
+        shared = cache.solve(names)
+        fresh = optimal_placement_exact(names, tables, L)
+        ts, tf = (shared.throughput if shared else 0.0,
+                  fresh.throughput if fresh else 0.0)
+        assert ts == tf, (names, ts, tf)
+
+
+def test_partitions_by_shape_counts():
+    # 3 identical items: integer partitions of 3
+    cg, by_S = _partitions_by_shape((3,))
+    assert sum(len(idx) for _, idx in by_S.values()) == 3
+    # 3 distinct items: Bell(3) = 5
+    cg, by_S = _partitions_by_shape((1, 1, 1))
+    assert sum(len(idx) for _, idx in by_S.values()) == 5
+    cg, by_S = _partitions_by_shape((2, 1))
+    assert sum(len(idx) for _, idx in by_S.values()) == 4
+
+
+def test_generate_templates_golden_equality():
+    """prune=True template set: identical keys and throughputs between
+    the fast path and the seed per-combo exact solver."""
+    fast, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=4,
+                                 rho=8.0, solver="fast")
+    seed, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=4,
+                                 rho=8.0, solver="exact")
+    fd = {t.key: t.throughput for t in fast}
+    sd = {t.key: t.throughput for t in seed}
+    assert set(fd) == set(sd)
+    for k in fd:
+        assert abs(fd[k] - sd[k]) <= 1e-9, (k, fd[k], sd[k])
+    # placements on the fast path are valid layer splits
+    for t in fast:
+        assert sum(t.placement.layer_counts) == MODEL.n_layers
+        assert all(j >= 1 for j in t.placement.layer_counts)
+
+
+def test_pareto_prune_high_counts_fallback():
+    """Counts > 15 overflow the SWAR fields; the scalar fallback must
+    produce the same kept set as a brute-force reference."""
+    from repro.core.placement import Placement
+    from repro.core.templates import ServingTemplate, pareto_prune
+    r = np.random.default_rng(0)
+    names = ["a", "b", "c"]
+    temps = []
+    for _ in range(300):
+        counts = tuple((n, int(r.integers(0, 21))) for n in names)
+        counts = tuple((n, c) for n, c in counts if c > 0) or (("a", 1),)
+        pl = Placement(1, (4,),
+                       (tuple(n for n, c in counts for _ in range(c)),), 1.0)
+        temps.append(ServingTemplate("m", "decode", 80.0, counts, pl,
+                                     float(r.uniform(1, 100))))
+    kept = pareto_prune(temps, names)
+    order = sorted(temps, key=lambda t: -t.throughput)
+    ref = []
+    for t in order:
+        u = [t.usage().get(c, 0) for c in names]
+        if any(all(ku[j] <= u[j] for j in range(3)) for ku, _ in ref):
+            continue
+        ref.append((u, t))
+    assert [t.throughput for t in kept] == [t.throughput for _, t in ref]
+
+
+def test_build_library_incremental_reuse():
+    wls = {MODEL.name: WL}
+    lib1 = build_library([MODEL], CONFIGS, wls, n_max=3, rho=8.0)
+    # unchanged inputs: every (model, phase) pair is reused verbatim
+    lib2 = build_library([MODEL], CONFIGS, wls, n_max=3, rho=8.0,
+                         reuse=lib1)
+    assert all(s.get("reused") for s in lib2.stats.values())
+    for key in lib1.templates:
+        assert [t.key for t in lib2.templates[key]] \
+            == [t.key for t in lib1.templates[key]]
+    # changed config universe: nothing may be reused
+    bigger = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
+    lib3 = build_library([MODEL], bigger, wls, n_max=3, rho=8.0,
+                         reuse=lib1)
+    assert not any(s.get("reused") for s in lib3.stats.values())
+    assert lib3.size > 0

@@ -1,7 +1,10 @@
 """MILP substrate: numpy branch-and-bound vs HiGHS (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no network in this container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.solver.milp import MilpModel
 

@@ -1,7 +1,10 @@
 """Trace generators: determinism, statistics, availability walks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no network in this container
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hardware import CORE_CONFIGS, CORE_REGIONS
 from repro.traces.workloads import (TRACES, default_base_availability,
