@@ -16,12 +16,13 @@ def main() -> None:
     from benchmarks import (fig1_heterogeneity, fig2_joint, fig6_fidelity,
                             fig7_cost, fig9_scarce, fig11_imbalance,
                             fig12_helix, fig13_sensitivity, roofline,
-                            table1_specs, template_gen)
+                            sim_loop, table1_specs, template_gen)
 
     t0 = time.time()
     jobs = [
         ("table1", table1_specs.run),
         ("template_gen", template_gen.run),
+        ("sim_loop", sim_loop.run),
         ("fig1", fig1_heterogeneity.run),
         ("fig2", fig2_joint.run),
         ("fig6", fig6_fidelity.run),

@@ -1,0 +1,216 @@
+"""Simulator event-loop scaling benchmark (online stage).
+
+Times the batched decode event loop (``Simulator(batched=True)``, the
+default) against the per-iteration reference oracle on paper-scale
+seeded workloads over the core Serving-Template library, verifying
+bit-identical accounting (finished/dropped counts, per-epoch goodput
+and throughput) on every scenario, and records the trajectory in
+``artifacts/BENCH_sim_loop.json``.
+
+Scenarios:
+
+* ``backlog_drain`` — the regime ROADMAP flagged ("at paper-scale
+  request rates the heap churn dominates"): a fleet of the
+  small-capacity cost-efficient templates the allocator reaches for
+  under scarce availability (§6.4), each instance carrying a seeded
+  admission backlog, drained to completion.  Decode iterations are the
+  only events, so this isolates the event-loop hot path: the batched
+  loop advances ~90 iterations per heap event (constant-batch spans
+  over the queue backlog, then segmented spans over the decaying
+  resident set) where the oracle pays one event each.
+* ``steady_rate*`` — the same fleet fed by live seeded arrivals
+  (prefill -> KV transfer -> decode joins) at per-model request rates
+  around the paper's core-setup evaluation points, then drained.  KV
+  joins interrupt spans, so this reports the integrated speedup with
+  the full router/prefill path included.
+
+The headline ``speedup`` in the JSON is ``backlog_drain`` — the
+measure of the rebuilt event loop itself; the steady rows track the
+end-to-end effect (joins cap the batch length at avg_output/batch, so
+they sit lower by design, never below ~1x thanks to the adaptive
+span/fallback policy).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+from benchmarks.common import ART, FAST, Row, cached_library, scenario
+from repro.simulator.costmodel import InstanceCostModel
+from repro.simulator.sim import Simulator
+from repro.traces.workloads import gen_requests
+
+EPOCH_S = 360.0
+N_INST = 6                      # instances per model
+BACKLOG_X = 16.0                # queue depth per instance, in capacities
+STEADY_RATES = (2.0,) if FAST else (2.0, 6.0)
+STEADY_DUR = 720.0
+
+
+def _fleet_templates(models, lib, wls):
+    """Per model, the highest-throughput decode template with a small
+    SLO-bounded capacity (8..48 resident sequences) — the shapes the
+    allocator picks when scarce availability rules out big combos."""
+    cfg = lib.config_by_name
+    picks = {}
+    for mname, model in models.items():
+        best = None
+        for t in lib.get(mname, "decode"):
+            cm = InstanceCostModel(model, "decode", t.placement, cfg,
+                                   wls[mname])
+            if 8 <= cm.decode_capacity <= 48 and \
+                    (best is None or t.throughput > best[0].throughput):
+                best = (t, cm.decode_capacity)
+        if best is None:                        # fallback: smallest cap
+            t = min(lib.get(mname, "decode"),
+                    key=lambda t: InstanceCostModel(
+                        model, "decode", t.placement, cfg,
+                        wls[mname]).decode_capacity)
+            best = (t, InstanceCostModel(model, "decode", t.placement,
+                                         cfg, wls[mname]).decode_capacity)
+        picks[mname] = best
+    return picks
+
+
+def _prefill_templates(models, lib):
+    return {m: max(lib.get(m, "prefill"), key=lambda t: t.throughput)
+            for m in models}
+
+
+def _verify(models, s1, s2, t_end):
+    ok = (s1.dropped == s2.dropped
+          and {r.rid for r in s1.finished} == {r.rid for r in s2.finished})
+    for m in models:
+        ok = ok and len(s1.tokens[m]) == len(s2.tokens[m])
+        t = 0.0
+        while t < t_end and ok:
+            ok = (s1.goodput(m, t, t + EPOCH_S)
+                  == s2.goodput(m, t, t + EPOCH_S)
+                  and s1.throughput(m, t, t + EPOCH_S)
+                  == s2.throughput(m, t, t + EPOCH_S))
+            t += EPOCH_S
+    if not ok:
+        raise AssertionError("batched loop diverged from the "
+                             "per-iteration oracle")
+    return True
+
+
+def _drain_sim(batched, models, lib, wls, picks):
+    sim = Simulator(models, lib.config_by_name, wls, batched=batched)
+    for mi, (mname, (tmpl, cap)) in enumerate(picks.items()):
+        insts = [sim.add_instance("r0", tmpl, ready_delay=0.0)
+                 for _ in range(N_INST)]
+        n_req = int(N_INST * cap * BACKLOG_X)
+        reqs = gen_requests(mname, models[mname].trace, 1000.0,
+                            n_req / 1000.0 + 1.0, seed=13 + mi,
+                            rid0=mi * 10_000_000)[:n_req]
+        # an already-prefilled admission backlog sits on each instance
+        # at t=0 (KV transferred during an earlier scarcity episode);
+        # seeding the queues directly keeps the measured section free
+        # of injection events in both modes
+        for i, r in enumerate(reqs):
+            insts[i % N_INST].queue.append(r)
+        for inst in insts:
+            sim.ev.push(0.0, sim._maybe_start, inst)
+    t0 = time.time()
+    t = 0.0
+    while t < 40_000.0:
+        t += EPOCH_S
+        sim.run_until(t)
+    return sim, time.time() - t0
+
+
+def _steady_sim(batched, models, lib, wls, picks, pres, rate):
+    sim = Simulator(models, lib.config_by_name, wls, batched=batched)
+    for mname, (tmpl, _cap) in picks.items():
+        for _ in range(N_INST):
+            sim.add_instance("r0", tmpl, ready_delay=0.0)
+        sim.add_instance("r0", pres[mname], ready_delay=0.0)
+        sim.add_instance("r0", pres[mname], ready_delay=0.0)
+    for mi, mname in enumerate(picks):
+        for r in gen_requests(mname, models[mname].trace, rate,
+                              STEADY_DUR, seed=29 + mi,
+                              rid0=mi * 10_000_000):
+            sim.submit(r)
+    t0 = time.time()
+    t = 0.0
+    while t < STEADY_DUR + 40_000.0:
+        t += EPOCH_S
+        sim.run_until(t)
+    return sim, time.time() - t0
+
+
+def run() -> None:
+    models, configs, regions, wls = scenario(extended=False)
+    lib = cached_library("core", models, configs, wls)
+    picks = _fleet_templates(models, lib, wls)
+    pres = _prefill_templates(models, lib)
+    results = []
+
+    # ---- backlog drain: pure decode event loop -----------------------
+    # best-of-3: the container CPU throttles unpredictably and the
+    # batched wall is small, so single runs are noise-dominated
+    s_b, w_b = _drain_sim(True, models, lib, wls, picks)
+    s_o, w_o = _drain_sim(False, models, lib, wls, picks)
+    for _ in range(2):
+        w_b = min(w_b, _drain_sim(True, models, lib, wls, picks)[1])
+        w_o = min(w_o, _drain_sim(False, models, lib, wls, picks)[1])
+    _verify(models, s_o, s_b, 40_000.0)
+    toks = sum(len(s_o.tokens[m]) for m in models)
+    iters = sum(i.iters for i in s_b.instances.values())
+    spans = sum(i._gen for i in s_b.instances.values())
+    drain_speedup = w_o / max(w_b, 1e-9)
+    results.append({
+        "scenario": "backlog_drain", "tokens": toks,
+        "requests": len(s_o.finished), "iters": iters,
+        "iters_per_span": iters / max(spans, 1),
+        "oracle_s": w_o, "batched_s": w_b, "speedup": drain_speedup,
+        "equal": True,
+    })
+    us = w_b * 1e6 / max(toks, 1)
+    Row.add("sim_loop_backlog_drain", us,
+            f"speedup={drain_speedup:.1f}x"
+            f";{toks/max(w_b,1e-9)/1e6:.1f}Mtok/s"
+            f";iters_per_span={iters/max(spans,1):.0f}")
+
+    # ---- steady arrivals: integrated loop ----------------------------
+    for rate in STEADY_RATES:
+        s_b, w_b = _steady_sim(True, models, lib, wls, picks, pres, rate)
+        s_o, w_o = _steady_sim(False, models, lib, wls, picks, pres, rate)
+        w_b = min(w_b, _steady_sim(True, models, lib, wls, picks, pres,
+                                   rate)[1])
+        w_o = min(w_o, _steady_sim(False, models, lib, wls, picks, pres,
+                                   rate)[1])
+        _verify(models, s_o, s_b, STEADY_DUR + 40_000.0)
+        toks = sum(len(s_o.tokens[m]) for m in models)
+        sp = w_o / max(w_b, 1e-9)
+        results.append({
+            "scenario": f"steady_rate{rate:g}", "tokens": toks,
+            "requests": len(s_o.finished),
+            "oracle_s": w_o, "batched_s": w_b, "speedup": sp,
+            "equal": True,
+        })
+        Row.add(f"sim_loop_steady_rate{rate:g}",
+                w_b * 1e6 / max(toks, 1),
+                f"speedup={sp:.1f}x;{toks/max(w_b,1e-9)/1e6:.1f}Mtok/s")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_sim_loop.json"), "w") as f:
+        json.dump({
+            "fleet": {m: {"template": list(map(list, picks[m][0].counts)),
+                          "decode_capacity": picks[m][1]}
+                      for m in picks},
+            "n_inst_per_model": N_INST, "backlog_x": BACKLOG_X,
+            "speedup": drain_speedup,
+            "results": results,
+        }, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()
+    Row.flush(os.path.join(ART, "bench_sim_loop.csv"))

@@ -8,11 +8,15 @@ through the epoch while accounting hourly cost (provisioning + amortized
 initialization).
 
 Fault tolerance: ``fail_instance`` kills a running instance (node
-failure) at a random time *within* the epoch; its in-flight decode
-requests are re-routed, the coordinator immediately restarts a
-replacement instance toward the standing allocation target (paying the
-initialization delay and amortized init cost), and the next epoch
-re-solve re-optimizes the whole cluster (DESIGN.md §8).
+failure) at a random time *within* the epoch via
+``Simulator.kill_instance``, which settles the batched event loop's
+in-flight accounting and re-routes the victim's work (decode requests
+— resident and admission-queued alike — rejoin the decode pool
+directly; they never pass through prefill again).  The coordinator
+immediately restarts a replacement instance toward the standing
+allocation target (paying the initialization delay and amortized init
+cost), and the next epoch re-solve re-optimizes the whole cluster
+(DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -62,7 +66,8 @@ class ClusterRuntime:
                  library: TemplateLibrary, allocator_fn: AllocatorFn,
                  workloads: Dict, epoch_s: float = 360.0,
                  init_amortize_s: float = 3600.0,
-                 allocator_time_limit: float = 60.0):
+                 allocator_time_limit: float = 60.0,
+                 sim_batched: bool = True):
         self.models = models
         self.regions = regions
         self.configs = configs
@@ -72,7 +77,8 @@ class ClusterRuntime:
         self.epoch_s = epoch_s
         self.init_k = INIT_DELAY_S / init_amortize_s
         self.time_limit = allocator_time_limit
-        self.sim = Simulator(models, {c.name: c for c in configs}, workloads)
+        self.sim = Simulator(models, {c.name: c for c in configs}, workloads,
+                             batched=sim_batched)
         self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
         # mid-epoch failure-replacement accounting (folded into the
         # current epoch's n_new / init_cost by run())
@@ -142,14 +148,11 @@ class ClusterRuntime:
         if not pool:
             return None
         inst = rng.choice(pool)
-        inst.dead = True
-        # re-route its in-flight decode work
-        for req, _ in inst.resident:
-            self.sim.ev.push(self.sim.now, self.sim._join_decode, inst, req)
-        inst.resident = []
-        for req in inst.queue:
-            self.sim.ev.push(self.sim.now, self.sim._on_arrival, req)
-        inst.queue = []
+        # kill_instance settles the batched loop's in-flight accounting
+        # and re-routes the victim's work: decode requests (resident AND
+        # queued for admission — both already prefilled) rejoin the
+        # decode pool via _join_decode, never back through prefill
+        self.sim.kill_instance(inst)
         # immediate replacement: the standing allocation still targets
         # this (region, template); do not wait for the next re-solve
         key = (inst.region, inst.template.key)

@@ -12,7 +12,7 @@ come only from queueing/batching dynamics.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core import profiles as prof
 from repro.core.hardware import (INTER_NODE_GBPS, INTER_NODE_LATENCY_S,
@@ -102,12 +102,16 @@ class InstanceCostModel:
         """SLO-aware chunked-prefill admission budget (the C* the template
         generator assumed): largest chunk whose pipeline traversal meets
         the prefill SLO."""
+        if hasattr(self, "_pchunk"):
+            return self._pchunk
         fixed = sum(s.fixed for s in self.stages)
         pt = sum(s.per_token for s in self.stages)
         if fixed >= self.slo_s:
-            return max(int(self.wl.avg_prompt), 1)
-        c = int((self.slo_s - fixed) / max(pt, 1e-12))
-        return max(min(c, prof.MAX_PREFILL_CHUNK), 1)
+            self._pchunk = max(int(self.wl.avg_prompt), 1)
+        else:
+            c = int((self.slo_s - fixed) / max(pt, 1e-12))
+            self._pchunk = max(min(c, prof.MAX_PREFILL_CHUNK), 1)
+        return self._pchunk
 
     # -------------------------------------------------------------- decode
     def _decode_stage_time(self, s: StageModel, batch: int) -> float:
@@ -133,6 +137,14 @@ class InstanceCostModel:
 
     def decode_pipeline_latency(self, batch: int) -> float:
         return sum(self._decode_stage_time(s, batch) for s in self.stages)
+
+    def decode_times(self, batch: int) -> Tuple[float, float]:
+        """Batched-loop API: (iteration time, pipeline latency) from a
+        single per-stage sweep — the same floats ``decode_iter_time`` /
+        ``decode_pipeline_latency`` produce, computed once instead of
+        twice per scheduled iteration."""
+        ts = [self._decode_stage_time(s, batch) for s in self.stages]
+        return max(ts), sum(ts)
 
     @property
     def decode_capacity(self) -> int:

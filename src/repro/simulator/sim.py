@@ -7,13 +7,52 @@ continuous-batching decode iterations whose durations come from the
 stage-granularity cost model; KV caches are transferred prefill->decode
 with a bandwidth/latency model; scale-down drains, scale-up pays an
 initialization delay.
+
+Event-loop performance (ROADMAP "simulator event loop"): the decode hot
+path is batched.  Decode dynamics are piecewise-deterministic — between
+KV joins, the resident set only changes at *known* iteration counts
+(each request finishes after its remaining output tokens) — so instead
+of one heap event per iteration the simulator schedules a *span*: a
+segment schedule (batch size, iteration time, SLO verdict per segment)
+covering many iterations, ending where the schedule would be
+invalidated (an admission from a non-empty queue at the first finisher,
+the run horizon, or the adaptive span budget).  A KV join or a node
+failure mid-span settles the iterations whose boundaries have already
+passed and converts the in-flight iteration back into a per-iteration
+event; a join that lands on a *full* instance merely queues (it cannot
+change the running batch) and is logged for the EWMA replay, leaving
+the span intact.  Iteration boundaries are accumulated sequentially
+(``t += dt``, never reconstructed as ``t0 + i*dt``), so the batched
+loop reproduces the reference per-iteration loop's accounting
+bit-for-bit.  ``batched=False`` keeps the one-event-per-iteration loop
+as the equivalence oracle (see tests/test_sim.py and
+benchmarks/sim_loop.py).
+
+Two data-structure choices keep span bookkeeping off the O(batch) path:
+
+* Residents are a list sorted by *absolute finish iteration* (the
+  instance's cumulative iteration counter at join + the request's
+  output length).  Settling a span pops finishers off the front;
+  requests that did not finish are untouched.  Per-request token/SLO
+  counters derive in O(1) at finish from the instance's cumulative
+  ``iters``/``ok_iters`` counters snapshotted at join time (they
+  materialize when a request finishes or is re-routed by a failure).
+* Token accounting is run-length compressed (``TokenRuns``): one
+  record per span segment instead of ``k * batch`` per-token objects;
+  ``goodput``/``throughput`` queries count whole runs with vectorized
+  numpy masks, expanding only the (rare) runs that straddle a query
+  edge.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from bisect import bisect_right
+from collections import deque
+from itertools import accumulate, islice, repeat
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.hardware import NodeConfig, Region
 from repro.core.modelspec import ServedModel
@@ -22,6 +61,8 @@ from repro.simulator.costmodel import InstanceCostModel
 from repro.traces.workloads import Request
 
 INIT_DELAY_S = 90.0           # node start + weight load + warmup (§5.1)
+
+SPAN_MAX = 4096               # hard cap on the adaptive span budget
 
 
 class EventQueue:
@@ -39,15 +80,130 @@ class EventQueue:
         return bool(self._q)
 
 
-@dataclass
-class TokenRecord:
-    t: float
-    latency: float
-    ok: bool
+class TokenRuns:
+    """Generated-token accounting for one model, as run-length records.
+
+    A run is ``k`` consecutive decode iterations of constant batch size
+    ``b`` and constant SLO verdict ``ok``; its iteration boundaries are
+    ``t0 + dt, (t0 + dt) + dt, ...`` accumulated *sequentially* (the
+    floats the per-iteration loop would have produced) with the last
+    boundary stored as ``end``.  ``count`` resolves window queries from
+    the run table: runs entirely inside the window contribute ``k * b``
+    via one vectorized mask; only runs straddling a window edge are
+    expanded boundary-by-boundary.
+    """
+
+    def __init__(self):
+        self._t0: List[float] = []
+        self._dt: List[float] = []
+        self._k: List[int] = []
+        self._b: List[int] = []
+        self._ok: List[bool] = []
+        self._end: List[float] = []
+        self._total = 0
+        self._np = None         # cached numpy view (invalidated on add)
+
+    def add(self, t0: float, dt: float, k: int, b: int, ok: bool,
+            end: float):
+        self._t0.append(t0)
+        self._dt.append(dt)
+        self._k.append(k)
+        self._b.append(b)
+        self._ok.append(ok)
+        self._end.append(end)
+        self._total += k * b
+        self._np = None
+
+    def __len__(self) -> int:
+        """Total generated tokens (sum of k*b over runs)."""
+        return self._total
+
+    @property
+    def n_runs(self) -> int:
+        return len(self._t0)
+
+    def _arrays(self):
+        if self._np is None:
+            self._np = (np.array(self._t0), np.array(self._dt),
+                        np.array(self._k), np.array(self._b),
+                        np.array(self._ok, dtype=bool),
+                        np.array(self._end))
+        return self._np
+
+    def count(self, q0: float, q1: float, ok_only: bool = False) -> int:
+        """Tokens whose iteration boundary lies in [q0, q1)."""
+        if not self._t0:
+            return 0
+        t0, dt, k, b, ok, end = self._arrays()
+        first = t0 + dt
+        hit = (end >= q0) & (first < q1)
+        if ok_only:
+            hit &= ok
+        full = hit & (first >= q0) & (end < q1)
+        total = int((k[full] * b[full]).sum())
+        for i in np.nonzero(hit & ~full)[0]:
+            t, c = t0[i], 0
+            for _ in range(int(k[i])):
+                t = t + dt[i]
+                if t >= q1:
+                    break
+                if t >= q0:
+                    c += 1
+            total += c * int(b[i])
+        return total
+
+
+class _Span:
+    """An in-flight batched stretch of decode iterations.
+
+    ``segs`` is the piecewise-constant schedule: (off, k, b, dt, lat,
+    ok) — k iterations at batch size b starting after ``off`` earlier
+    span iterations.  ``bounds`` holds every iteration boundary,
+    sequentially accumulated.  ``single`` marks a constant-batch span
+    created with a non-empty admission queue (resident set pinned at
+    capacity): each finisher is virtually backfilled from the queue
+    (``adm`` logs the admission boundaries for the settle replay), so
+    neither finishers nor joins — which can only queue — invalidate the
+    schedule (``join_times`` feeds the EWMA replay).
+    """
+    __slots__ = ("gen", "start", "bounds", "segs", "single", "q0",
+                 "adm", "join_times", "ecache")
+
+    def __init__(self, gen, start, bounds, segs, single, q0, adm):
+        self.gen = gen
+        self.start = start
+        self.bounds = bounds
+        self.segs = segs
+        self.single = single
+        self.q0 = q0
+        self.adm = adm          # sorted admission boundaries (iterations)
+        self.join_times: List[float] = []
+        # incremental EWMA replay state: (updates applied, value,
+        # join_times index, admission index, current queue depth)
+        self.ecache = (0, None, 0, 0, q0)
+
+    def ok_upto(self, n: int) -> int:
+        """SLO-meeting iterations among the span's first n."""
+        good = 0
+        for off, k_j, _b, _dt, _lat, ok in self.segs:
+            c = min(n - off, k_j)
+            if c <= 0:
+                break
+            if ok:
+                good += c
+        return good
 
 
 class SimInstance:
-    """One Serving Instance (prefill or decode role)."""
+    """One Serving Instance (prefill or decode role).
+
+    Decode residents live in ``resident`` sorted by absolute finish
+    iteration: entries are (finish_iter, req, join_iters, join_ok) with
+    ``res_keys`` the parallel finish_iter list for bisecting.  The
+    request's emitted count is ``iters - join_iters``; its token/SLO
+    counters materialize from the cumulative ``iters``/``ok_iters``
+    when it finishes or is re-routed.
+    """
 
     def __init__(self, iid: int, region: str, template: ServingTemplate,
                  model: ServedModel, cm: InstanceCostModel, ready_at: float):
@@ -60,17 +216,24 @@ class SimInstance:
         self.draining = False
         self.dead = False
         self.busy = False
-        self.queue: List[Request] = []          # prefill queue
-        self.resident: List[Tuple[Request, int]] = []  # decode (req, emitted)
+        self.queue: Deque[Request] = deque()    # prefill / decode admission
+        self.resident: List[Tuple[int, Request, int, int]] = []
+        self.res_keys: List[int] = []           # finish iters, sorted
+        self.iters = 0                          # settled decode iterations
+        self.ok_iters = 0                       # ... of which met the SLO
         self.ewma_load = 0.0
+        self.tokens_out = 0                     # generated tokens served here
+        self.span: Optional[_Span] = None       # batched decode state
+        self._gen = 0                           # span generation counter
+        self._spanlen = 8                       # adaptive span budget
+        self._kavg = 8.0                        # EWMA of settled span length
+        self._quiet = 0                         # join-free iteration streak
+        self._joined = False                    # a join landed mid-iteration
+        self._dtc: Dict[int, Tuple[float, float]] = {}  # b -> (iter, lat)
 
     @property
     def phase(self) -> str:
         return self.template.phase
-
-    @property
-    def weight(self) -> float:
-        return self.template.throughput / (1.0 + self.ewma_load)
 
     def idle(self) -> bool:
         return not self.queue and not self.resident and not self.busy
@@ -79,15 +242,19 @@ class SimInstance:
 class Simulator:
     def __init__(self, models: Dict[str, ServedModel],
                  config_by_name: Dict[str, NodeConfig],
-                 workloads: Dict[str, "WorkloadStats"]):
+                 workloads: Dict[str, "WorkloadStats"],
+                 batched: bool = True):
         self.models = models
         self.configs = config_by_name
         self.workloads = workloads
+        self.batched = batched
         self.ev = EventQueue()
         self.now = 0.0
+        self.horizon = float("inf")
         self._iid = itertools.count()
         self.instances: Dict[int, SimInstance] = {}
-        self.tokens: Dict[str, List[TokenRecord]] = {m: [] for m in models}
+        self._by_pool: Dict[Tuple[str, str], List[SimInstance]] = {}
+        self.tokens: Dict[str, TokenRuns] = {m: TokenRuns() for m in models}
         self.prefill_lat: Dict[str, List[float]] = {m: [] for m in models}
         self.finished: List[Request] = []
         self.dropped: int = 0
@@ -106,28 +273,161 @@ class Simulator:
         inst = SimInstance(next(self._iid), region, template, model, cm,
                            self.now + ready_delay)
         self.instances[inst.iid] = inst
+        self._by_pool.setdefault((template.model, template.phase),
+                                 []).append(inst)
         return inst
 
     def drain_instance(self, inst: SimInstance):
         inst.draining = True
 
-    def pool(self, model: str, phase: str) -> List[SimInstance]:
-        return [i for i in self.instances.values()
-                if i.template.model == model and i.phase == phase
-                and not i.draining and not i.dead
-                and i.ready_at <= self.now + 1e-9]
+    def kill_instance(self, inst: SimInstance):
+        """Node failure: settle any in-flight batched accounting up to
+        ``now`` (the in-flight partial iteration yields nothing, as in
+        the per-iteration loop where the cleared resident set makes its
+        pending event a no-op), mark the instance dead and re-route its
+        work — decode requests (already prefilled) via ``_join_decode``
+        whether resident *or* queued for admission, prefill requests
+        back through ``_on_arrival``.
+        """
+        if inst.dead:
+            return
+        sp = inst.span
+        if sp is not None:
+            n = min(bisect_right(sp.bounds, self.now), len(sp.bounds) - 1)
+            self._settle_runs(inst, sp, n)
+            inst._gen += 1
+            inst.span = None
+        inst.dead = True        # a prefill batch in flight is cancelled
+        # by the dead-check in _prefill_done and re-routed there
+        self._pool_remove(inst)
+        res, q = inst.resident, inst.queue
+        inst.resident = []
+        inst.res_keys = []
+        inst.queue = deque()
+        if inst.phase == "decode":
+            for _f, req, j_it, j_ok in res:
+                # partial credit for tokens generated here before the
+                # failure (the per-iteration loop counted them live)
+                req.decode_tokens_ok += inst.iters - j_it
+                req.decode_slo_ok += inst.ok_iters - j_ok
+                self.ev.push(self.now, self._join_decode, inst, req)
+            for req in q:
+                self.ev.push(self.now, self._join_decode, inst, req)
+        else:
+            for req in q:
+                self.ev.push(self.now, self._on_arrival, req)
+
+    def _pool_remove(self, inst: SimInstance):
+        """Evict a dead instance from its routing pool so the router's
+        per-request scan stays proportional to live instances."""
+        pool = self._by_pool.get((inst.template.model, inst.phase))
+        if pool is not None and inst in pool:
+            pool.remove(inst)
+
+    def _earliest_ready(self, model: str, phase: str) -> Optional[float]:
+        """Earliest ready_at among still-initializing pool members."""
+        cut = self.now + 1e-9
+        best = None
+        for i in self._by_pool.get((model, phase), ()):
+            if not i.draining and not i.dead and i.ready_at > cut:
+                if best is None or i.ready_at < best:
+                    best = i.ready_at
+        return best
 
     # ------------------------------------------------------------- router
+    def _ewma_at(self, inst: SimInstance) -> float:
+        """EWMA load as the per-iteration loop would see it *now*: a
+        batched span applies its updates lazily, one per iteration
+        started (n completed boundaries => n+1 started iterations), with
+        queue-depth changes from logged joins replayed in order."""
+        sp = inst.span
+        if sp is None:
+            return inst.ewma_load
+        n = min(bisect_right(sp.bounds, self.now) + 1, len(sp.bounds))
+        return self._ewma_replay(inst, sp, n)
+
+    def _ewma_replay(self, inst: SimInstance, sp: _Span, n: int) -> float:
+        """Value of the EWMA after the first ``n`` iteration starts of
+        the span, replayed incrementally (update j at time ``start`` for
+        j=0 else ``bounds[j-1]`` sees the queue depth at that instant:
+        logged joins grow it, virtual admissions shrink it)."""
+        done, e, ji, ai, q = sp.ecache
+        if e is None:
+            e = inst.ewma_load
+        if n == done:
+            return e
+        if n < done:            # unreachable (n is monotone in time);
+            done, e, ji, ai, q = 0, inst.ewma_load, 0, 0, sp.q0
+        jt = sp.join_times
+        adm = sp.adm
+        if not jt and not adm and q == 0.0 and e == 0.0:
+            sp.ecache = (n, 0.0, 0, 0, 0.0)
+            return 0.0
+        if not jt:
+            # no logged joins: q is piecewise-constant between
+            # admission boundaries — run tight constant-q stretches
+            la = len(adm)
+            j = done
+            while j < n:
+                while ai < la and adm[ai] <= j:
+                    q -= 1.0
+                    ai += 1
+                nxt = adm[ai] if ai < la and adm[ai] < n else n
+                for _ in range(j, nxt):
+                    e = 0.9 * e + 0.1 * q
+                j = nxt
+        else:
+            for j in range(done, n):
+                t = sp.start if j == 0 else sp.bounds[j - 1]
+                while ji < len(jt) and jt[ji] <= t:
+                    q += 1.0
+                    ji += 1
+                while ai < len(adm) and adm[ai] <= j:
+                    q -= 1.0
+                    ai += 1
+                e = 0.9 * e + 0.1 * q
+        sp.ecache = (n, e, ji, ai, q)
+        return e
+
+    def _depth_at(self, inst: SimInstance) -> int:
+        """Queue + resident depth as the per-iteration loop would see it
+        now: residents whose finish boundary already passed inside an
+        unsettled span no longer count."""
+        d = len(inst.queue) + len(inst.resident)
+        sp = inst.span
+        if sp is not None:
+            n = bisect_right(sp.bounds, self.now)
+            if n:
+                if sp.single:
+                    # every mid-span finisher was backfilled: departures
+                    # so far == admissions so far
+                    d -= bisect_right(sp.adm, n)
+                else:
+                    d -= bisect_right(inst.res_keys, inst.iters + n)
+        return d
+
     def route(self, model: str, phase: str) -> Optional[SimInstance]:
-        pool = self.pool(model, phase)
-        if not pool:
-            return None
         # weighted selection: least (queue depth / weight) — weighted-RR
-        # with EWMA straggler correction (DESIGN.md §8)
-        def load(i: SimInstance) -> float:
-            depth = len(i.queue) + len(i.resident)
-            return (depth + 1.0) / max(i.weight, 1e-9)
-        return min(pool, key=load)
+        # with EWMA straggler correction (DESIGN.md §8).  Inlined hot
+        # loop: routing runs twice per request, so skip the pool-list
+        # allocation and take the span-free fast path when possible.
+        cut = self.now + 1e-9
+        best = None
+        best_load = 0.0
+        for i in self._by_pool.get((model, phase), ()):
+            if i.draining or i.dead or i.ready_at > cut:
+                continue
+            if i.span is None:
+                depth = len(i.queue) + len(i.resident)
+                e = i.ewma_load
+            else:
+                depth = self._depth_at(i)
+                e = self._ewma_at(i)
+            w = i.template.throughput / (1.0 + e)
+            ld = (depth + 1.0) / (w if w > 1e-9 else 1e-9)
+            if best is None or ld < best_load:
+                best, best_load = i, ld
+        return best
 
     # ------------------------------------------------------------ arrival
     def submit(self, req: Request):
@@ -136,7 +436,15 @@ class Simulator:
     def _on_arrival(self, req: Request):
         inst = self.route(req.model, "prefill")
         if inst is None:
-            self.dropped += 1
+            # cold start / pool re-initialization: hold the request and
+            # flush it when an instance becomes ready instead of
+            # dropping it (requests are lost only when no instance is
+            # even initializing)
+            t = self._earliest_ready(req.model, "prefill")
+            if t is None:
+                self.dropped += 1
+            else:
+                self.ev.push(t, self._on_arrival, req)
             return
         inst.queue.append(req)
         self._maybe_start(inst)
@@ -150,8 +458,9 @@ class Simulator:
             return
         if inst.phase == "prefill" and inst.queue:
             batch, tokens = [], 0
-            while inst.queue and tokens < inst.cm.prefill_chunk:
-                r = inst.queue.pop(0)
+            chunk = inst.cm.prefill_chunk
+            while inst.queue and tokens < chunk:
+                r = inst.queue.popleft()
                 batch.append(r)
                 tokens += r.prompt_len
             # successive iterations pipeline across stages: the instance
@@ -164,71 +473,358 @@ class Simulator:
             self.ev.push(self.now + free, self._free, inst)
             self.ev.push(self.now + done, self._prefill_done, inst, batch)
         elif inst.phase == "decode" and (inst.resident or inst.queue):
-            while inst.queue and len(inst.resident) < inst.cm.decode_capacity:
-                inst.resident.append((inst.queue.pop(0), 0))
-            b = len(inst.resident)
-            free = inst.cm.decode_iter_time(b)
-            lat = inst.cm.decode_pipeline_latency(b)
-            inst.busy = True
-            self.ev.push(self.now + free, self._decode_done, inst, lat)
+            self._start_decode(inst)
 
     def _free(self, inst: SimInstance):
         inst.busy = False
         self._maybe_start(inst)
 
     def _prefill_done(self, inst: SimInstance, batch: List[Request]):
+        if inst.dead:
+            # the node failed mid-batch: nothing was produced — the
+            # batch re-enters the router (prefill runs again elsewhere;
+            # no latency was recorded for the lost pass)
+            for r in batch:
+                self.ev.push(self.now, self._on_arrival, r)
+            return
         for r in batch:
             r.prefill_done = self.now
             self.prefill_lat[r.model].append(self.now - r.arrival)
             # KV transfer to a decode instance
             dst = self.route(r.model, "decode")
-            if dst is None:
-                self.dropped += 1
-                continue
             delay = inst.cm.kv_transfer_time(r.prompt_len)
+            if dst is None:
+                t = self._earliest_ready(r.model, "decode")
+                if t is None:
+                    self.dropped += 1
+                else:           # decode pool still initializing: hold
+                    self.ev.push(max(t, self.now + delay),
+                                 self._dispatch_decode, r)
+                continue
             self.ev.push(self.now + delay, self._join_decode, dst, r)
 
     # ------------------------------------------------------------- decode
+    def _decode_times(self, inst: SimInstance, b: int) -> Tuple[float, float]:
+        """(iteration time, pipeline latency) for batch b, memoized per
+        instance; tolerates duck-typed cost models without the combined
+        ``decode_times`` API (e.g. the fitted model of fig6)."""
+        c = inst._dtc.get(b)
+        if c is None:
+            cm = inst.cm
+            if hasattr(cm, "decode_times"):
+                c = cm.decode_times(b)
+            else:
+                c = (cm.decode_iter_time(b), cm.decode_pipeline_latency(b))
+            inst._dtc[b] = c
+        return c
+
+    def _res_add(self, inst: SimInstance, req: Request):
+        """Insert a request into the finish-iteration-sorted residents."""
+        f = inst.iters + req.output_len
+        i = bisect_right(inst.res_keys, f)
+        inst.res_keys.insert(i, f)
+        inst.resident.insert(i, (f, req, inst.iters, inst.ok_iters))
+
+    def _start_decode(self, inst: SimInstance):
+        cap = inst.cm.decode_capacity
+        while inst.queue and len(inst.resident) < cap:
+            self._res_add(inst, inst.queue.popleft())
+        b = len(inst.resident)
+        if b == 0:
+            return
+        # Per-iteration scheduling: always in oracle mode, and in
+        # batched mode when the instance's queue is empty (no
+        # join-proof constant-batch span possible) AND recent history
+        # says a join lands every couple of iterations — there a span
+        # would be built only to be interrupted, costing more than the
+        # heap events it removes.  A streak of join-free iterations
+        # (or a risen settle average) re-enters span mode.
+        if not self.batched or \
+                (not inst.queue and inst._kavg < 3.0 and inst._quiet < 4):
+            dt, lat = self._decode_times(inst, b)
+            inst.busy = True
+            # EWMA straggler feedback on *decode* iterations too (the
+            # seed only updated it for prefill, leaving the router's
+            # correction dead for decode pools)
+            inst.ewma_load = 0.9 * inst.ewma_load + 0.1 * len(inst.queue)
+            self.ev.push(self.now + dt, self._decode_done, inst, lat,
+                         self.now, dt)
+            return
+        self._build_span(inst)
+
+    def _build_span(self, inst: SimInstance):
+        """Schedule a batched span from the current resident set.
+
+        Queue empty: the resident set evolves deterministically until
+        the instance drains — segment the schedule at each distinct
+        finish iteration (batch size steps down as requests finish), up
+        to the adaptive span budget (a KV join would invalidate the
+        schedule, so interrupt-heavy instances keep spans short).
+        Queue non-empty (resident set pinned at capacity): a
+        constant-batch span — every finisher is backfilled from the
+        queue at its boundary, so the batch size, iteration time and
+        SLO verdict never change; the walk below merges resident and
+        admitted finish offsets to find where the queue runs dry (the
+        first unfilled departure ends the span).  Joins cannot break a
+        constant-batch span: they land in the queue, only extending its
+        validity.  Either way the span is capped at the run horizon so
+        epoch metrics never miss settled tokens.
+        """
+        keys = inst.res_keys
+        n_res = len(keys)
+        iters0 = inst.iters
+        single = bool(inst.queue)
+        slo = inst.model.decode_slo_ms / 1e3
+        horizon = self.horizon
+        bounds: List[float] = []
+        segs: List[Tuple[int, int, int, float, float, bool]] = []
+        t = self.now
+        adm: List[int] = []
+        if single:
+            # constant-batch walk over merged finish offsets
+            dt, lat = self._decode_times(inst, n_res)
+            ok = lat <= slo
+            queue = inst.queue
+            m0 = len(queue)
+            adm_fins: List[int] = []            # admitted finish offsets
+            ri = qi = 0
+            while True:
+                o = keys[ri] - iters0 if ri < n_res else None
+                if adm_fins and (o is None or adm_fins[0] < o):
+                    o = heapq.heappop(adm_fins)
+                else:
+                    ri += 1
+                if o >= SPAN_MAX:
+                    k_end = SPAN_MAX
+                    break
+                if qi >= m0:
+                    k_end = o           # departure with a dry queue:
+                    break               # the batch shrinks after this
+                adm.append(o)
+                heapq.heappush(adm_fins, o + queue[qi].output_len)
+                qi += 1
+            # C-speed sequential accumulation — bit-identical to the
+            # oracle's repeated `t += dt`
+            bounds = list(islice(accumulate(repeat(dt, k_end),
+                                            initial=t), 1, None))
+            cut = bisect_right(bounds, horizon)
+            if cut < k_end:
+                del bounds[max(cut, 1):]
+            segs.append((0, len(bounds), n_res, dt, lat, ok))
+        else:
+            # adaptive budget tracking the observed settle distance:
+            # interrupt-heavy instances schedule short spans (building
+            # a long schedule per KV join costs more than it saves),
+            # quietly draining ones grow geometrically
+            cap_iters = inst._spanlen
+            # distinct finish offsets = segment ends, capped
+            targets: List[int] = []
+            i = 0
+            while i < n_res:
+                L = keys[i] - iters0
+                if L >= cap_iters:
+                    targets.append(cap_iters)
+                    break
+                targets.append(L)
+                i = bisect_right(keys, keys[i])
+            off = 0
+            for L in targets:
+                b_j = n_res - bisect_right(keys, iters0 + off)
+                dt, lat = self._decode_times(inst, b_j)
+                ok = lat <= slo
+                seg = list(islice(accumulate(repeat(dt, L - off),
+                                             initial=t), 1, None))
+                cut = bisect_right(seg, horizon)
+                capped = cut < len(seg)
+                if capped and cut == 0 and not bounds:
+                    cut = 1             # always schedule >= 1 iteration
+                if cut:
+                    bounds.extend(seg[:cut])
+                    t = bounds[-1]
+                    segs.append((off, cut, b_j, dt, lat, ok))
+                    off += cut
+                if capped:
+                    break
+        inst._gen += 1
+        inst.span = _Span(inst._gen, self.now, bounds, segs, single,
+                          float(len(inst.queue)), adm)
+        inst.busy = True
+        self.ev.push(bounds[-1], self._span_done, inst, inst._gen)
+
+    def _settle_runs(self, inst: SimInstance, sp: _Span, n: int):
+        """Account the first n iterations of a span: one TokenRuns
+        record per (partially) covered segment, pop finishers off the
+        sorted residents (finish stamped at the exact boundary,
+        counters materialized from the cumulative iteration counters);
+        everything still resident is untouched."""
+        if n <= 0:
+            return
+        bounds = sp.bounds
+        runs = self.tokens[inst.template.model]
+        ok_gain = 0
+        for off, k_j, b_j, dt, _lat, ok in sp.segs:
+            s_j = min(n - off, k_j)
+            if s_j <= 0:
+                break
+            t0 = bounds[off - 1] if off else sp.start
+            runs.add(t0, dt, s_j, b_j, ok, bounds[off + s_j - 1])
+            inst.tokens_out += s_j * b_j
+            if ok:
+                ok_gain += s_j
+        iters0 = inst.iters
+        cut = iters0 + n
+        for o in sp.adm:
+            # replay the virtual admissions of a constant-batch span:
+            # each backfills the finisher departing at boundary o
+            if o > n:
+                break
+            req = inst.queue.popleft()
+            f = iters0 + o + req.output_len
+            i = bisect_right(inst.res_keys, f)
+            inst.res_keys.insert(i, f)
+            inst.resident.insert(
+                i, (f, req, iters0 + o, inst.ok_iters + sp.ok_upto(o)))
+        self._pop_finishers(
+            inst, cut,
+            lambda f: bounds[f - iters0 - 1],
+            lambda f: inst.ok_iters + sp.ok_upto(f - iters0))
+        inst.iters = cut
+        inst.ok_iters += ok_gain
+
+    def _pop_finishers(self, inst: SimInstance, cut: int, finish_at,
+                       ok_at):
+        """Pop residents whose finish iteration is <= ``cut`` and
+        materialize their counters from the cumulative per-instance
+        iteration counters — the single place both the batched settle
+        and the per-iteration oracle credit finished requests, keeping
+        their accounting in lockstep.  ``finish_at(f)``/``ok_at(f)``
+        supply the timestamp and cumulative ok-iteration count at
+        finish iteration ``f``."""
+        i = bisect_right(inst.res_keys, cut)
+        if i:
+            for f, req, j_it, j_ok in inst.resident[:i]:
+                req.finish = finish_at(f)
+                req.decode_tokens_ok += f - j_it
+                req.decode_slo_ok += ok_at(f) - j_ok
+                self.finished.append(req)
+            del inst.resident[:i]
+            del inst.res_keys[:i]
+
+    def _interrupt_span(self, inst: SimInstance):
+        """A join arrived mid-span and changes the schedule: settle the
+        boundaries that already passed and convert the in-flight
+        iteration into a per-iteration event (same batch/latency it was
+        started with), exactly as the reference loop would run it."""
+        sp = inst.span
+        n = min(bisect_right(sp.bounds, self.now), len(sp.bounds) - 1)
+        inst.ewma_load = self._ewma_replay(inst, sp, n + 1)
+        self._settle_runs(inst, sp, n)
+        # locate the in-flight iteration's segment for its batch timing
+        lat = dt = None
+        for off, k_j, _b, dt_j, lat_j, _ok in sp.segs:
+            if off <= n < off + k_j:
+                dt, lat = dt_j, lat_j
+                break
+        start = sp.bounds[n - 1] if n > 0 else sp.start
+        inst._gen += 1
+        inst.span = None
+        self._adapt_spanlen(inst, n)
+        self.ev.push(sp.bounds[n], self._decode_done, inst, lat, start, dt)
+        # inst.busy stays True until that event fires
+
+    @staticmethod
+    def _adapt_spanlen(inst: SimInstance, settled: int):
+        """Track the observed settle distance so the next span buys
+        about as many iterations as interrupts allow it to keep."""
+        inst._kavg = a = 0.7 * inst._kavg + 0.3 * settled
+        s = int(1.5 * a) + 1
+        inst._spanlen = s if s < SPAN_MAX else SPAN_MAX
+
+    def _span_done(self, inst: SimInstance, gen: int):
+        sp = inst.span
+        if inst.dead or sp is None or sp.gen != gen:
+            return                              # superseded / failed
+        inst.ewma_load = self._ewma_replay(inst, sp, len(sp.bounds))
+        self._settle_runs(inst, sp, len(sp.bounds))
+        inst.span = None
+        inst.busy = False
+        if not sp.single:       # constant-batch spans are join-proof;
+            # only queue-empty spans inform the interrupt-risk budget
+            self._adapt_spanlen(inst, len(sp.bounds))
+        self._after_decode_iter(inst)
+
+    def _dispatch_decode(self, req: Request):
+        """Route a prefilled request into the decode pool, holding it
+        while the pool is (re-)initializing."""
+        dst = self.route(req.model, "decode")
+        if dst is not None:
+            self._join_decode(dst, req)
+            return
+        t = self._earliest_ready(req.model, "decode")
+        if t is None:
+            self.dropped += 1
+        else:
+            self.ev.push(t, self._dispatch_decode, req)
+
     def _join_decode(self, inst: SimInstance, req: Request):
         if inst.dead:
-            inst2 = self.route(req.model, "decode")
-            if inst2 is None:
-                self.dropped += 1
+            self._dispatch_decode(req)
+            return
+        inst._joined = True
+        sp = inst.span
+        if sp is not None:
+            if sp.single and len(inst.resident) >= inst.cm.decode_capacity:
+                # resident set is pinned at capacity until the span's
+                # finisher: queueing cannot change the running batch, so
+                # the span stays valid — just log the depth change for
+                # the EWMA replay
+                inst.queue.append(req)
+                sp.join_times.append(self.now)
                 return
-            inst = inst2
+            self._interrupt_span(inst)
         if len(inst.resident) < inst.cm.decode_capacity:
-            inst.resident.append((req, 0))
+            self._res_add(inst, req)
         else:
             inst.queue.append(req)      # SLO-aware admission control
         self._maybe_start(inst)
 
-    def _decode_done(self, inst: SimInstance, lat: float):
+    def _decode_done(self, inst: SimInstance, lat: float, start: float,
+                     dt: float):
         inst.busy = False
         slo = inst.model.decode_slo_ms / 1e3
         ok = lat <= slo
-        still = []
-        for req, emitted in inst.resident:
-            emitted += 1
-            self.tokens[req.model].append(TokenRecord(self.now, lat, ok))
+        b = len(inst.resident)
+        if b:
+            self.tokens[inst.template.model].add(start, dt, 1, b, ok,
+                                                 self.now)
+            inst.tokens_out += b
+            inst.iters += 1
             if ok:
-                req.decode_slo_ok += 1
-            req.decode_tokens_ok += 1
-            if emitted >= req.output_len:
-                req.finish = self.now
-                self.finished.append(req)
-            else:
-                still.append((req, emitted))
-        cap = inst.cm.decode_capacity
-        inst.resident = still
+                inst.ok_iters += 1
+            now = self.now
+            self._pop_finishers(inst, inst.iters,
+                                lambda _f: now,
+                                lambda _f: inst.ok_iters)
+        if inst._joined:
+            inst._quiet = 0
+            inst._joined = False
+        else:
+            inst._quiet += 1
+        self._after_decode_iter(inst)
+
+    def _after_decode_iter(self, inst: SimInstance):
         # admit pending requests up to the SLO/memory cap
+        cap = inst.cm.decode_capacity
         while inst.queue and len(inst.resident) < cap:
-            inst.resident.append((inst.queue.pop(0), 0))
+            self._res_add(inst, inst.queue.popleft())
         if inst.draining and not inst.resident and not inst.queue:
             inst.dead = True
+            self._pool_remove(inst)
         self._maybe_start(inst)
 
     # ---------------------------------------------------------------- run
     def run_until(self, t_end: float):
+        self.horizon = t_end
         while self.ev and self.ev._q[0][0] <= t_end:
             t, _, fn, args = self.ev.pop()
             self.now = max(self.now, t)
@@ -238,9 +834,8 @@ class Simulator:
     # ------------------------------------------------------------ metrics
     def goodput(self, model: str, t0: float, t1: float) -> float:
         """Generated tokens/s within [t0, t1) meeting the decode SLO."""
-        recs = [r for r in self.tokens[model] if t0 <= r.t < t1 and r.ok]
-        return len(recs) / max(t1 - t0, 1e-9)
+        return self.tokens[model].count(t0, t1, ok_only=True) \
+            / max(t1 - t0, 1e-9)
 
     def throughput(self, model: str, t0: float, t1: float) -> float:
-        recs = [r for r in self.tokens[model] if t0 <= r.t < t1]
-        return len(recs) / max(t1 - t0, 1e-9)
+        return self.tokens[model].count(t0, t1) / max(t1 - t0, 1e-9)

@@ -1,0 +1,62 @@
+"""Disk-cached Serving-Template libraries for the test suite.
+
+``test_runtime`` / ``test_allocator`` need small template libraries but
+used to rebuild them from scratch at every module import, dominating
+tier-1 wall time.  This helper pickles each library under
+``artifacts/lib_test_*.pkl`` (next to the benchmark suite's
+``lib_*.pkl`` caches) and reuses it on subsequent runs.  Coral
+libraries go through ``build_library(reuse=...)`` so every (model,
+phase) pair is fingerprint-checked (config universe, n_max, rho, SLO,
+workload) and regenerated if its inputs changed; homogeneous baseline
+libraries store the same per-(model, phase, config) fingerprints
+alongside the pickle and rebuild whenever any of them drifts.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+
+from repro.core.baselines import homo_library
+from repro.core.templates import build_library, generation_fingerprint
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _homo_fingerprint(models, configs, wls, n_max, rho):
+    """Everything a homo_library build depends on: one per-config
+    generation fingerprint per (model, phase)."""
+    return tuple(
+        generation_fingerprint(m, phase, [c], wls[m.name], n_max, rho,
+                               True, "fast", None)
+        for m in models for phase in ("prefill", "decode")
+        for c in sorted(configs, key=lambda c: c.name))
+
+
+def cached_test_library(tag: str, models, configs, wls,
+                        n_max: int, rho: float, homo: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    kind = "homo" if homo else "coral"
+    path = os.path.join(ART, f"lib_test_{tag}_{kind}_{n_max}_{rho}.pkl")
+    reuse = None
+    if os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                reuse = pickle.load(f)
+        except Exception:                               # noqa: BLE001
+            reuse = None
+    if homo:
+        fp = _homo_fingerprint(models, configs, wls, n_max, rho)
+        if isinstance(reuse, dict) and reuse.get("fp") == fp:
+            return reuse["lib"]
+        lib = homo_library(models, configs, wls, n_max=n_max, rho=rho)
+        blob = {"fp": fp, "lib": lib}
+    else:
+        lib = build_library(models, configs, wls, n_max=n_max, rho=rho,
+                            reuse=reuse)
+        if reuse is not None and all(
+                s.get("reused") for s in lib.stats.values()):
+            return reuse                # nothing changed: keep mtime
+        blob = lib
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    return lib

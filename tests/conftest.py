@@ -7,3 +7,20 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def phi4_runtime_library():
+    """Session-scoped template library for the epoch-runtime tests,
+    served from the ``artifacts/lib_test_*.pkl`` disk cache (see
+    tests/_libcache.py) instead of being rebuilt per run."""
+    from _libcache import cached_test_library
+    from repro.core.hardware import make_node_configs
+    from repro.core.modelspec import PAPER_MODELS
+    from repro.traces.workloads import workload_stats
+
+    model = PAPER_MODELS["phi4-14b"]
+    configs = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+    wls = {model.name: workload_stats(model.trace)}
+    return cached_test_library("runtime", [model], configs, wls,
+                               n_max=3, rho=8.0)

@@ -6,18 +6,23 @@ try:
 except ImportError:                      # no network in this container
     from _hypothesis_compat import given, settings, strategies as st
 
+from _libcache import cached_test_library
+
 from repro.core.allocator import AllocProblem, Demand, allocate
-from repro.core.baselines import homo_allocate, cauchy_allocate, homo_library
+from repro.core.baselines import homo_allocate, cauchy_allocate
 from repro.core.hardware import CORE_REGIONS, make_node_configs
 from repro.core.modelspec import PAPER_MODELS
-from repro.core.templates import build_library
 from repro.traces.workloads import workload_stats
 
 CONFIGS = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
 MODELS = [PAPER_MODELS["phi4-14b"], PAPER_MODELS["gpt-oss-20b"]]
 WLS = {m.name: workload_stats(m.trace) for m in MODELS}
-LIB = build_library(MODELS, CONFIGS, WLS, n_max=3, rho=8.0)
-HLIB = homo_library(MODELS, CONFIGS, WLS, n_max=3, rho=8.0)
+# module-level (not a fixture): the hypothesis-shimmed @given tests
+# cannot take fixture arguments, so the libraries are pulled from the
+# artifacts/lib_test_*.pkl disk cache at import instead of rebuilt
+LIB = cached_test_library("alloc", MODELS, CONFIGS, WLS, n_max=3, rho=8.0)
+HLIB = cached_test_library("alloc", MODELS, CONFIGS, WLS, n_max=3, rho=8.0,
+                           homo=True)
 
 
 def _check_alloc(alloc, avail, demands):

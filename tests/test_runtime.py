@@ -1,23 +1,28 @@
-"""Epoch runtime: reconcile semantics, cost accounting, failure recovery."""
+"""Epoch runtime: reconcile semantics, cost accounting, failure recovery.
+
+The template library comes from the session-scoped
+``phi4_runtime_library`` fixture (tests/conftest.py), which serves the
+``artifacts/lib_test_*.pkl`` disk cache instead of rebuilding at every
+run."""
 import numpy as np
 import pytest
 
 from repro.core.allocator import AllocProblem, Demand, allocate
 from repro.core.hardware import CORE_REGIONS, make_node_configs
 from repro.core.modelspec import PAPER_MODELS
-from repro.core.templates import build_library
 from repro.runtime.cluster import ClusterRuntime
 from repro.traces.workloads import gen_requests, workload_stats
 
 CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
 MODEL = PAPER_MODELS["phi4-14b"]
 WLS = {MODEL.name: workload_stats(MODEL.trace)}
-LIB = build_library([MODEL], CONFIGS, WLS, n_max=3, rho=8.0)
 
 
-def _run(fail_rate=0.0, n_epochs=3, rate=2.0, epoch_s=240.0):
-    rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS, LIB,
-                        allocate, WLS, epoch_s=epoch_s)
+def _run(lib, fail_rate=0.0, n_epochs=3, rate=2.0, epoch_s=240.0,
+         sim_batched=True):
+    rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS, lib,
+                        allocate, WLS, epoch_s=epoch_s,
+                        sim_batched=sim_batched)
     reqs = gen_requests(MODEL.name, MODEL.trace, rate, n_epochs * epoch_s,
                         seed=0)
     avail = [{(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
@@ -27,11 +32,11 @@ def _run(fail_rate=0.0, n_epochs=3, rate=2.0, epoch_s=240.0):
                 Demand(MODEL.name, "decode", rate * wl.avg_output)]
                for _ in range(n_epochs)]
     res = rt.run(reqs, avail, demands, fail_rate_per_epoch=fail_rate)
-    return rt, res
+    return rt, res, reqs
 
 
-def test_epoch_run_steady_state():
-    rt, res = _run()
+def test_epoch_run_steady_state(phi4_runtime_library):
+    rt, res, _reqs = _run(phi4_runtime_library)
     assert len(res.epochs) == 3
     # after the warm-up epoch the cluster composition is stable
     assert res.epochs[1].n_new == 0
@@ -43,17 +48,60 @@ def test_epoch_run_steady_state():
     assert res.epochs[2].goodput[MODEL.name] >= 0.5 * demand
 
 
-def test_failure_recovery():
-    rt, res = _run(fail_rate=1.0, n_epochs=4)
+def test_epoch0_cold_start_holds_requests(phi4_runtime_library):
+    """Requests arriving during the initial INIT_DELAY_S are held for
+    the warming pool, not dropped: epoch 0 serves tokens and the run
+    loses nothing (the seed dropped every pre-ready arrival)."""
+    rt, res, _reqs = _run(phi4_runtime_library, n_epochs=2, epoch_s=180.0)
+    assert rt.sim.dropped == 0
+    assert res.epochs[0].goodput[MODEL.name] > 0
+    # nothing arrived before t=0, so every request eventually prefills
+    lost = [r for r in rt.sim.finished if r.prefill_done < 0]
+    assert not lost
+
+
+def test_failure_recovery(phi4_runtime_library):
+    rt, res, _reqs = _run(phi4_runtime_library, fail_rate=1.0, n_epochs=4)
     # failures occurred, yet the allocator replaced capacity: the final
     # epoch still registers new instances or sustained goodput
     assert any(e.n_new > 0 for e in res.epochs[1:])
     assert res.epochs[-1].goodput[MODEL.name] > 0
 
 
-def test_cost_accounting_matches_running_instances():
-    rt, res = _run()
-    cfg = LIB.config_by_name
+def test_failure_does_not_double_count_prefill(phi4_runtime_library):
+    """fail_instance re-routes a decode victim's queue via
+    _join_decode: prefill latency is recorded at most once per request
+    (the seed pushed the queue back through _on_arrival, re-running
+    prefill)."""
+    rt, res, reqs = _run(phi4_runtime_library, fail_rate=1.0, n_epochs=4)
+    sim = rt.sim
+    n_prefilled = len([r for r in reqs if r.prefill_done >= 0])
+    # exactly one prefill latency record per request that prefilled
+    assert len(sim.prefill_lat[MODEL.name]) == n_prefilled
+    seen = {r.rid for r in sim.finished}
+    assert len(seen) == len(sim.finished), "no request finishes twice"
+
+
+def test_runtime_batched_matches_oracle(phi4_runtime_library):
+    """End-to-end epoch metrics are bit-identical between the batched
+    loop and the per-iteration oracle, failures included."""
+    rt1, res1, _ = _run(phi4_runtime_library, fail_rate=1.0, n_epochs=3,
+                     sim_batched=False)
+    rt2, res2, _ = _run(phi4_runtime_library, fail_rate=1.0, n_epochs=3,
+                     sim_batched=True)
+    for e1, e2 in zip(res1.epochs, res2.epochs):
+        assert e1.goodput == e2.goodput
+        assert e1.throughput == e2.throughput
+        assert e1.cost_per_hour == e2.cost_per_hour
+        assert e1.n_new == e2.n_new and e1.n_drained == e2.n_drained
+    assert rt1.sim.dropped == rt2.sim.dropped
+    assert {r.rid for r in rt1.sim.finished} == \
+        {r.rid for r in rt2.sim.finished}
+
+
+def test_cost_accounting_matches_running_instances(phi4_runtime_library):
+    rt, res, _reqs = _run(phi4_runtime_library)
+    cfg = phi4_runtime_library.config_by_name
     expect = 0.0
     for (region_name, tkey), insts in rt.running.items():
         region = next(r for r in CORE_REGIONS if r.name == region_name)
