@@ -16,7 +16,7 @@ import pickle
 import time
 from typing import Dict, List, Tuple
 
-from repro.core.allocator import Demand
+from repro.core.allocator import AllocatorState, Demand
 from repro.core.baselines import homo_library
 from repro.core.hardware import (CORE_CONFIGS, CORE_REGIONS, EXT_CONFIGS,
                                  EXT_REGIONS)
@@ -92,6 +92,16 @@ def cached_library(name: str, models, configs, wls, homo: bool = False,
     with open(path, "wb") as f:
         pickle.dump(lib, f)
     return lib
+
+
+def coral_allocator() -> AllocatorState:
+    """A fresh persistent columnar allocator for one epoch-loop run.
+
+    ``AllocatorState`` is callable as an ``AllocatorFn`` and keeps the
+    assembled ILP structure (plus the incumbent warm-start) across the
+    run's epoch re-solves; use one instance per ``ClusterRuntime``.
+    """
+    return AllocatorState()
 
 
 def make_demands(models, wls, rate: float, skew: Dict[str, float] = None):

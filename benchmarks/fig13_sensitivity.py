@@ -8,7 +8,7 @@ import time
 from benchmarks.common import FAST, Row
 from repro.core.hardware import EXT_CONFIGS, US_EAST_2
 from repro.core.modelspec import PAPER_MODELS
-from repro.core.templates import generate_templates
+from repro.core.templates import generate_templates, template_columns
 from repro.traces.workloads import workload_stats
 
 
@@ -26,9 +26,11 @@ def run():
     for n_max, rho in sweep:
         temps, stats = generate_templates(model, "prefill", EXT_CONFIGS, wl,
                                           n_max=n_max, rho=rho)
-        eff = max((t.throughput / t.cost(US_EAST_2,
-                                         {c.name: c for c in EXT_CONFIGS})
-                   for t in temps), default=0.0)
+        # columnar: all per-template costs in one usage @ price matmul
+        cols = template_columns(temps, {c.name: c for c in EXT_CONFIGS})
+        eff = float((cols.throughput
+                     / cols.region_cost([US_EAST_2])[:, 0]).max()) \
+            if cols.n else 0.0
         best_effs.append(eff)
         print(f"{n_max:4d} {rho:5.0f} {stats['combos']:8d} "
               f"{stats['templates']:9d} {stats['seconds']:7.1f} {eff:12.1f}")

@@ -7,9 +7,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (FAST, Row, cached_library, make_avail,
-                               make_demands, make_requests, scenario)
-from repro.core.allocator import allocate
+from benchmarks.common import (FAST, Row, cached_library, coral_allocator,
+                               make_avail, make_demands, make_requests,
+                               scenario)
 from repro.core.baselines import cauchy_allocate, homo_allocate
 from repro.runtime.cluster import ClusterRuntime
 
@@ -26,7 +26,7 @@ def _run_setup(extended: bool, rate: float, n_epochs: int, epoch_s: float):
 
     out = {}
     for mname, library, fn in [
-        ("Coral", lib, allocate),
+        ("Coral", lib, coral_allocator()),       # persistent, warm-started
         ("Homo", hlib, lambda p: homo_allocate(p, hlib)),
         ("Cauchy", hlib, lambda p: cauchy_allocate(p, hlib)),
     ]:
@@ -39,7 +39,7 @@ def _run_setup(extended: bool, rate: float, n_epochs: int, epoch_s: float):
         breakdown = {}
         cfg = library.config_by_name
         for (rname, key), insts in rt.running.items():
-            region = next(r for r in regions if r.name == rname)
+            region = rt.region_by_name[rname]
             for inst in insts:
                 if inst.dead:
                     continue

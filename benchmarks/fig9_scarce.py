@@ -6,9 +6,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (FAST, Row, cached_library, make_avail,
-                               make_demands, make_requests, scenario)
-from repro.core.allocator import allocate
+from benchmarks.common import (FAST, Row, cached_library, coral_allocator,
+                               make_avail, make_demands, make_requests,
+                               scenario)
 from repro.core.baselines import cauchy_allocate, homo_allocate
 from repro.runtime.cluster import ClusterRuntime
 
@@ -34,7 +34,7 @@ def run(extended: bool = False):
     print(f"\n== Figs 8-10 ({tag}): scarce availability ==")
     results = {}
     for mname, library, fn in [
-        ("Coral", lib, allocate),
+        ("Coral", lib, coral_allocator()),       # persistent, warm-started
         ("Homo", hlib, lambda p: homo_allocate(p, hlib)),
         ("Cauchy", hlib, lambda p: cauchy_allocate(p, hlib)),
     ]:

@@ -4,6 +4,11 @@
 # Set BENCH_FAST=0 for the full-scale (paper-parameter) runs; the default
 # trims trace durations and the (N_max, rho) caps so the whole suite
 # completes on this 1-core CPU container.
+#
+# ``--check``: after the suite, compare the freshly written
+# artifacts/BENCH_*.json against the committed reference points in
+# tools/bench_reference.json (tools/check_bench.py) and exit non-zero
+# on a >20% regression.
 import os
 import sys
 import time
@@ -13,16 +18,17 @@ import traceback
 def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.common import ART, Row
-    from benchmarks import (fig1_heterogeneity, fig2_joint, fig6_fidelity,
-                            fig7_cost, fig9_scarce, fig11_imbalance,
-                            fig12_helix, fig13_sensitivity, roofline,
-                            sim_loop, table1_specs, template_gen)
+    from benchmarks import (allocator_bench, fig1_heterogeneity, fig2_joint,
+                            fig6_fidelity, fig7_cost, fig9_scarce,
+                            fig11_imbalance, fig12_helix, fig13_sensitivity,
+                            roofline, sim_loop, table1_specs, template_gen)
 
     t0 = time.time()
     jobs = [
         ("table1", table1_specs.run),
         ("template_gen", template_gen.run),
         ("sim_loop", sim_loop.run),
+        ("allocator", allocator_bench.run),
         ("fig1", fig1_heterogeneity.run),
         ("fig2", fig2_joint.run),
         ("fig6", fig6_fidelity.run),
@@ -48,6 +54,9 @@ def main() -> None:
     if failures:
         print(f"FAILED benchmarks: {failures}")
         raise SystemExit(1)
+    if "--check" in sys.argv[1:]:
+        from tools.check_bench import check
+        raise SystemExit(check())
 
 
 if __name__ == '__main__':

@@ -4,7 +4,7 @@ shifting demand and availability, with a node-failure injection
 
 Run:  PYTHONPATH=src python examples/adaptive_cluster.py
 """
-from repro.core.allocator import Demand, allocate
+from repro.core.allocator import AllocatorState, Demand
 from repro.core.hardware import CORE_REGIONS, make_node_configs
 from repro.core.modelspec import PAPER_MODELS
 from repro.core.templates import build_library
@@ -39,8 +39,10 @@ demands = [[Demand(m, "prefill", rates[e] * wls[m].avg_prompt)
               for m in models]
            for e in range(n_epochs)]
 
-rt = ClusterRuntime(models, CORE_REGIONS, configs, lib, allocate, wls,
-                    epoch_s=epoch_s)
+# a persistent AllocatorState reuses the assembled ILP across the four
+# epoch re-solves and warm-starts each from the previous solution
+rt = ClusterRuntime(models, CORE_REGIONS, configs, lib, AllocatorState(),
+                    wls, epoch_s=epoch_s)
 res = rt.run(reqs, avail, demands, fail_rate_per_epoch=0.5, seed=0)
 print(f"{'ep':>2} {'$/h':>8} {'inst':>5} {'new':>4} {'drain':>5} "
       f"{'solve(s)':>8}  goodput/model")

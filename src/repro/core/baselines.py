@@ -19,7 +19,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.allocator import Allocation, AllocProblem, Demand
+from repro.core.allocator import (MIP_GAP, Allocation, AllocProblem, Demand,
+                                  availability_caps, availability_row_coo,
+                                  availability_row_index)
 from repro.core.hardware import NodeConfig, Region
 from repro.core.modelspec import ServedModel
 from repro.core.placement import (Placement, PlacementCache,
@@ -104,9 +106,17 @@ def homo_allocate(p: AllocProblem, lib: TemplateLibrary) -> Allocation:
 def cauchy_allocate(p: AllocProblem, lib: TemplateLibrary) -> Allocation:
     """Per-model ILP over homogeneous templates (phases jointly, models
     sequentially — cost efficiency in the objective, no cross-model
-    coordination)."""
+    coordination).
+
+    Assembled columnar: each (model, phase) block comes straight from
+    ``lib.columns()`` arrays (per-region cost via one ``usage @
+    price.T`` matmul, vectorized availability/demand caps) and is
+    appended to the MILP via the batched ``add_vars`` /
+    ``add_constrs_coo`` APIs — no per-variable Python loop.
+    """
+    regions = list(p.regions)
+    R = len(regions)
     avail = dict(p.availability)
-    cfg = lib.config_by_name
     instances: Dict[Tuple[str, Tuple], int] = {}
     tmpl: Dict[Tuple, ServingTemplate] = {}
     total_cost = 0.0
@@ -115,58 +125,107 @@ def cauchy_allocate(p: AllocProblem, lib: TemplateLibrary) -> Allocation:
     for mname in models:
         dems = [d for d in p.demands if d.model == mname]
         mdl = MilpModel()
-        vvars = {}
-        rows: Dict[Tuple[str, str], Dict[int, float]] = {}
-        drows: Dict[Tuple[str, str], Dict[int, float]] = {}
-        pen: Dict[Tuple[str, str], float] = {}
+        blocks = []                 # (dem, cols, cost (T,R), base)
+        V = 0
         for dem in dems:
-            dkey = (dem.model, dem.phase)
-            drows[dkey] = {}
-            temps = lib.get(dem.model, dem.phase)
-            if not temps:
+            cols = lib.columns(dem.model, dem.phase)
+            if cols.n == 0:
+                blocks.append((dem, None, None, V))
                 continue
-            worst = max(t.cost(r, cfg) / max(t.throughput, 1e-9)
-                        for t in temps for r in p.regions)
-            pen[dkey] = 100.0 * worst
-            for r in p.regions:
-                for t in temps:
-                    ub = min(_max_instances(avail, r.name, t),
-                             int(np.ceil(dem.tokens_per_s
-                                         / max(t.throughput, 1e-9))) + 1)
-                    if ub <= 0:
-                        continue
-                    v = mdl.add_var(obj=t.cost(r, cfg), ub=ub, integer=True)
-                    vvars[(r.name, t.key)] = v
-                    tmpl[t.key] = t
-                    for c, k in t.counts:
-                        rows.setdefault((r.name, c), {})[v] = float(k)
-                    drows[dkey][v] = float(t.throughput)
-        for key, coeffs in rows.items():
-            mdl.add_constr(coeffs, ub=float(avail.get(key, 0)))
-        svars = {}
-        for dem in dems:
-            dkey = (dem.model, dem.phase)
-            coeffs = dict(drows.get(dkey, {}))
-            s = mdl.add_var(obj=pen.get(dkey, 1e5), lb=0.0,
-                            ub=dem.tokens_per_s)
-            svars[dkey] = s
-            coeffs[s] = 1.0
-            mdl.add_constr(coeffs, lb=dem.tokens_per_s)
-        res = mdl.solve(time_limit=p.time_limit, gap=1e-4)
+            cost = cols.region_cost(regions)
+            blocks.append((dem, cols, cost, V))
+            V += cols.n * R
+        if V == 0:
+            for dem in dems:
+                unmet[(dem.model, dem.phase)] = dem.tokens_per_s
+            continue
+        cnames = next(c for _, c, _, _ in blocks
+                      if c is not None).config_names
+        C = len(cnames)
+        avail_mat = np.zeros((R, C))
+        for r in range(R):
+            for ci, cn in enumerate(cnames):
+                avail_mat[r, ci] = avail.get((regions[r].name, cn), 0)
+
+        v_obj = np.empty(V)
+        v_ub = np.empty(V)
+        v_keys: List[Tuple[str, Tuple]] = [None] * V
+        coo_d, coo_r, coo_c = [], [], []
+        for dem, cols, cost, base in blocks:
+            if cols is None:
+                continue
+            n = cols.n
+            dem_cap = np.ceil(dem.tokens_per_s
+                              / np.maximum(cols.throughput, 1e-9)) + 1
+            caps = np.maximum(np.minimum(
+                availability_caps(avail_mat, cols.usage), dem_cap), 0)
+            for t in cols.templates:
+                tmpl[t.key] = t
+            for r in range(R):
+                lo = base + r * n
+                v_obj[lo:lo + n] = cost[:, r]
+                v_ub[lo:lo + n] = caps[r]
+                rname = regions[r].name
+                for i, t in enumerate(cols.templates):
+                    v_keys[lo + i] = (rname, t.key)
+
+        # availability rows, one per (region, used config)
+        row_of, a_rix, a_cix = availability_row_index(
+            [cols.usage for _, cols, _, _ in blocks if cols is not None],
+            R, C)
+        avail_rhs = avail_mat[a_rix, a_cix]
+        for dem, cols, cost, base in blocks:
+            if cols is None:
+                continue
+            d, r_, c_ = availability_row_coo(cols.usage, base, R, row_of)
+            coo_d += d
+            coo_r += r_
+            coo_c += c_
+        n_avail = len(avail_rhs)
+
+        # demand rows: served + s >= tokens, shortfall penalized at
+        # ~100x the worst $/tok/s of the model's own template pool
+        s_obj, s_ub, dem_rhs = [], [], []
+        for di, (dem, cols, cost, base) in enumerate(blocks):
+            if cols is not None:
+                worst = float((cost / np.maximum(
+                    cols.throughput, 1e-9)[:, None]).max())
+                s_obj.append(100.0 * worst)
+                coo_d.append(np.tile(cols.throughput, R))
+                coo_r.append(np.full(cols.n * R, n_avail + di,
+                                     dtype=np.int64))
+                coo_c.append(base + np.arange(cols.n * R))
+            else:
+                s_obj.append(1e5)
+            s_ub.append(dem.tokens_per_s)
+            dem_rhs.append(dem.tokens_per_s)
+            coo_d.append(np.ones(1))
+            coo_r.append(np.array([n_avail + di]))
+            coo_c.append(np.array([V + di]))
+
+        mdl.add_vars(v_obj, 0.0, v_ub, True)
+        mdl.add_vars(np.array(s_obj), 0.0, np.array(s_ub), False)
+        row_lb = np.concatenate([np.full(n_avail, -np.inf),
+                                 np.array(dem_rhs)])
+        row_ub = np.concatenate([np.array(avail_rhs),
+                                 np.full(len(dems), np.inf)])
+        mdl.add_constrs_coo(np.concatenate(coo_d), np.concatenate(coo_r),
+                            np.concatenate(coo_c), lb=row_lb, ub=row_ub)
+        res = mdl.solve(time_limit=p.time_limit, gap=MIP_GAP)
         if not res.ok:
             for dem in dems:
                 unmet[(dem.model, dem.phase)] = dem.tokens_per_s
             continue
-        for (rname, tkey), v in vvars.items():
-            n = int(round(res.x[v]))
-            if n > 0:
-                t = tmpl[tkey]
-                region = next(r for r in p.regions if r.name == rname)
-                _consume(avail, rname, t, n)
-                instances[(rname, tkey)] = instances.get((rname, tkey), 0) + n
-                total_cost += n * t.cost(region, cfg)
-        for dem in dems:
-            s = res.x[svars[(dem.model, dem.phase)]]
+        counts = np.rint(res.x[:V]).astype(np.int64)
+        for i in np.nonzero(counts > 0)[0]:
+            rname, tkey = v_keys[i]
+            t = tmpl[tkey]
+            n = int(counts[i])
+            _consume(avail, rname, t, n)
+            instances[(rname, tkey)] = instances.get((rname, tkey), 0) + n
+            total_cost += n * float(v_obj[i])
+        for di, dem in enumerate(dems):
+            s = res.x[V + di]
             if s > 1e-6:
                 unmet[(dem.model, dem.phase)] = float(s)
     return Allocation(instances, tmpl, total_cost, 0.0, unmet, 0.0, 0, True)

@@ -113,6 +113,68 @@ def decode_throughput(model: ServedModel, node: NodeConfig, j: int,
     return b / iter_time(b)
 
 
+def decode_throughput_row(model: ServedModel, node: NodeConfig,
+                          budget_s: float, wl: WorkloadStats) -> np.ndarray:
+    """Vectorized ``decode_throughput`` over j = 1..n_layers.
+
+    One array sweep replaces n_layers scalar calls (each with a 40-step
+    batch bisection), which is what keeps ``LibraryColumns`` / template
+    generation off scalar profile sweeps on cold caches.  Every
+    operation mirrors the scalar function in the same order, so rows
+    are bit-identical to the scalar sweep (tested in
+    tests/test_profiles.py).
+    """
+    L = model.n_layers
+    j = np.arange(1, L + 1, dtype=float)
+    per = model.params_layer_total + model.embed_params / model.n_layers
+    w_bytes = np.floor(j * per * model.dtype_bytes)    # int() truncation
+    mem = node.mem_gb * 1e9 * MEM_HEADROOM
+    eff_flops = node.tflops * 1e12 * node.tp_efficiency() * MFU_DECODE
+    eff_bw = node.bw_tbps * 1e12 * BW_EFF
+    ctx = wl.avg_ctx_decode
+    if model.recurrent:
+        kv_seq = j * 64 * model.d_model * 4
+    else:
+        kv_seq = j * model.kv_bytes_per_token_layer() \
+            * model._ctx_eff(wl.max_ctx)
+    b_mem = (mem - w_bytes) / np.maximum(kv_seq, 1.0)
+    f_tok = model.flops_per_token_layer(ctx, "decode") * j
+    net_tok = model.d_model * model.dtype_bytes / (INTER_NODE_GBPS * 1e9)
+    kv_read = model.kv_read_bytes_layer(ctx)
+    if model.n_experts:
+        shared = (model.attn_params_layer + 2 * model.d_model
+                  + model.embed_params / model.n_layers) * model.dtype_bytes
+        expert_all = model.ffn_params_layer_total * model.dtype_bytes
+
+        def read_bytes(b):
+            frac = np.minimum(1.0, b * model.top_k / model.n_experts)
+            return j * (shared + frac * expert_all) + b * j * kv_read
+    else:
+        def read_bytes(b):
+            return w_bytes + b * j * kv_read
+
+    base = ALPHA_DECODE + INTER_NODE_LATENCY_S
+
+    def iter_time(b):
+        return base + read_bytes(b) / eff_bw \
+            + b * f_tok / eff_flops + b * net_tok
+
+    with np.errstate(all="ignore"):
+        feasible = (w_bytes <= mem) & (b_mem >= 1.0) \
+            & (iter_time(np.ones(L)) <= budget_s)
+        hi = np.where(b_mem >= 1.0, b_mem, 1.0)
+        full = iter_time(hi) <= budget_s
+        lo, hw = np.ones(L), hi.copy()
+        for _ in range(40):
+            mid = 0.5 * (lo + hw)
+            ok = iter_time(mid) <= budget_s
+            lo = np.where(ok, mid, lo)
+            hw = np.where(ok, hw, mid)
+        b = np.where(full, hi, lo)
+        thr = b / iter_time(b)
+    return np.where(feasible, thr, 0.0)
+
+
 def throughput(model: ServedModel, node: NodeConfig, j: int, phase: str,
                budget_s: float, wl: WorkloadStats) -> float:
     fn = prefill_throughput if phase == "prefill" else decode_throughput
@@ -152,9 +214,14 @@ class ProfileTable:
         if row is None:
             budget = self.slo_s / n_stages
             L = self.model.n_layers
-            vals = np.array([throughput(self.model, node, j, self.phase,
-                                        budget, self.wl)
-                             for j in range(1, L + 1)])
+            if self.phase == "decode":
+                # one vectorized sweep over all j (batch bisection incl.)
+                vals = decode_throughput_row(self.model, node, budget,
+                                             self.wl)
+            else:
+                vals = np.array([throughput(self.model, node, j, self.phase,
+                                            budget, self.wl)
+                                 for j in range(1, L + 1)])
             row = np.minimum.accumulate(vals)
             row.setflags(write=False)       # shared across callers
             self._shared[key] = row

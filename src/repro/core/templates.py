@@ -92,6 +92,55 @@ def enumerate_combos(configs: Sequence[NodeConfig], n_max: int,
 
 
 @dataclass
+class LibraryColumns:
+    """Columnar (array-form) view of one (model, phase) template set.
+
+    The online allocator consumes templates as arrays, not objects:
+    ``usage`` is the (templates x configs) node-usage matrix over the
+    library-wide sorted config universe, ``throughput`` the matching
+    tokens/s vector.  ``region_cost(regions)`` collapses per-template
+    per-region provisioning cost into one ``usage @ price.T`` matmul —
+    the Pareto/var-cap selection, shortfall penalties and per-var upper
+    bounds in ``repro.core.allocator`` are all vectorized ops over these
+    arrays.
+    """
+    templates: List[ServingTemplate]
+    keys: List[Tuple]
+    config_names: Tuple[str, ...]
+    config_by_name: Dict[str, NodeConfig]
+    usage: np.ndarray          # (T, C) float64, counts per config
+    throughput: np.ndarray     # (T,)  float64
+
+    @property
+    def n(self) -> int:
+        return len(self.templates)
+
+    def price_matrix(self, regions) -> np.ndarray:
+        """(R, C) node $/h per (region, config)."""
+        return np.array([[r.node_usd_per_hour(self.config_by_name[c])
+                          for c in self.config_names] for r in regions])
+
+    def region_cost(self, regions) -> np.ndarray:
+        """(T, R) instance $/h of each template in each region."""
+        return self.usage @ self.price_matrix(regions).T
+
+
+def template_columns(temps: Sequence[ServingTemplate],
+                     config_by_name: Dict[str, NodeConfig]
+                     ) -> LibraryColumns:
+    """Build the columnar view of a template list (see LibraryColumns)."""
+    names = tuple(sorted(config_by_name))
+    cidx = {c: i for i, c in enumerate(names)}
+    usage = np.zeros((len(temps), len(names)))
+    for i, t in enumerate(temps):
+        for c, k in t.counts:
+            usage[i, cidx[c]] = k
+    thr = np.array([t.throughput for t in temps], dtype=float)
+    return LibraryColumns(list(temps), [t.key for t in temps], names,
+                          config_by_name, usage, thr)
+
+
+@dataclass
 class TemplateLibrary:
     templates: Dict[Tuple[str, str], List[ServingTemplate]] = field(
         default_factory=dict)
@@ -104,6 +153,23 @@ class TemplateLibrary:
     def add(self, key, temps: List[ServingTemplate], stats: Dict):
         self.templates[key] = temps
         self.stats[key] = stats
+        self.__dict__.get("_columns_cache", {}).pop(key, None)
+
+    def columns(self, model: str, phase: str) -> LibraryColumns:
+        """Cached columnar view of one (model, phase) template set.
+
+        The cache lives in ``__dict__`` (not a dataclass field) so
+        libraries unpickled from older artifacts lazily grow it; ``add``
+        invalidates the affected pair.
+        """
+        cache = self.__dict__.setdefault("_columns_cache", {})
+        key = (model, phase)
+        cols = cache.get(key)
+        if cols is None:
+            cols = template_columns(self.get(model, phase),
+                                    self.config_by_name)
+            cache[key] = cols
+        return cols
 
     @property
     def size(self) -> int:

@@ -7,6 +7,13 @@ on scale-down, INIT_DELAY on scale-up), then advance the event simulator
 through the epoch while accounting hourly cost (provisioning + amortized
 initialization).
 
+Pass a persistent ``repro.core.allocator.AllocatorState`` as
+``allocator_fn`` to reuse the assembled ILP structure across epoch
+re-solves (incumbent warm-start included).  A failed or timed-out solve
+(``Allocation.ok == False``) is *not* a scale-to-zero target: the
+runtime keeps the previous epoch's allocation and flags the epoch via
+``EpochMetrics.solver_failed``.
+
 Fault tolerance: ``fail_instance`` kills a running instance (node
 failure) at a random time *within* the epoch via
 ``Simulator.kill_instance``, which settles the batched event loop's
@@ -44,6 +51,9 @@ class EpochMetrics:
     n_drained: int
     solve_seconds: float
     unmet: Dict
+    # the epoch's solve failed/timed out and the previous epoch's
+    # allocation (or an incumbent fallback) was kept instead
+    solver_failed: bool = False
 
 
 @dataclass
@@ -79,7 +89,11 @@ class ClusterRuntime:
         self.time_limit = allocator_time_limit
         self.sim = Simulator(models, {c.name: c for c in configs}, workloads,
                              batched=sim_batched)
+        self.region_by_name: Dict[str, Region] = {r.name: r for r in regions}
         self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
+        # last successful allocation, kept as the target when a later
+        # epoch's solve fails (never scale-to-zero on solver failure)
+        self._last_alloc: Optional[Allocation] = None
         # mid-epoch failure-replacement accounting (folded into the
         # current epoch's n_new / init_cost by run())
         self._epoch_new = 0
@@ -121,7 +135,7 @@ class ClusterRuntime:
             live = [i for i in self.running.get(key, [])
                     if not i.dead and not i.draining]
             template = alloc.templates[tkey]
-            region = next(r for r in self.regions if r.name == region_name)
+            region = self.region_by_name[region_name]
             for _ in range(tgt - len(live)):
                 inst = self.sim.add_instance(region_name, template)
                 self.running.setdefault(key, []).append(inst)
@@ -158,7 +172,7 @@ class ClusterRuntime:
         key = (inst.region, inst.template.key)
         repl = self.sim.add_instance(inst.region, inst.template)
         self.running.setdefault(key, []).append(repl)
-        region = next(r for r in self.regions if r.name == inst.region)
+        region = self.region_by_name[inst.region]
         self._epoch_new += 1
         self._epoch_init_cost += inst.template.cost(
             region, self.library.config_by_name) * self.init_k
@@ -186,6 +200,23 @@ class ClusterRuntime:
                 self.library, current=self._current_counts(),
                 init_penalty_k=self.init_k, time_limit=self.time_limit)
             alloc = self.allocator_fn(prob)
+            solver_failed = not alloc.ok or getattr(alloc, "fallback", False)
+            solve_s, unmet = alloc.solve_seconds, alloc.unmet
+            if not alloc.ok:
+                # failed/timed-out solve: an empty allocation is NOT a
+                # scale-to-zero target — keep the previous epoch's
+                # allocation (if any) instead of draining the cluster,
+                # reporting its shortfall against *this* epoch's demands
+                if self._last_alloc is not None:
+                    alloc = self._last_alloc
+                    unmet = {}
+                    for d in demands_per_epoch[e]:
+                        short = d.tokens_per_s \
+                            - alloc.served(d.model, d.phase)
+                        if short > 1e-6:
+                            unmet[(d.model, d.phase)] = short
+            else:
+                self._last_alloc = alloc
             n_new, n_drained, init_cost = self.reconcile(alloc)
             self._epoch_new = 0
             self._epoch_init_cost = 0.0
@@ -201,8 +232,7 @@ class ClusterRuntime:
             cfg = self.library.config_by_name
             cost = 0.0
             for (region_name, tkey), insts in self.running.items():
-                region = next(r for r in self.regions
-                              if r.name == region_name)
+                region = self.region_by_name[region_name]
                 live = [i for i in insts if not i.dead]
                 for inst in live:
                     cost += inst.template.cost(region, cfg)
@@ -214,5 +244,6 @@ class ClusterRuntime:
                 n_instances=len([i for i in self.sim.instances.values()
                                  if not i.dead]),
                 n_new=n_new, n_drained=n_drained,
-                solve_seconds=alloc.solve_seconds, unmet=alloc.unmet))
+                solve_seconds=solve_s, unmet=unmet,
+                solver_failed=solver_failed))
         return result

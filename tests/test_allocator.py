@@ -8,7 +8,8 @@ except ImportError:                      # no network in this container
 
 from _libcache import cached_test_library
 
-from repro.core.allocator import AllocProblem, Demand, allocate
+from repro.core.allocator import (AllocProblem, AllocatorState, Demand,
+                                  allocate, allocate_reference)
 from repro.core.baselines import homo_allocate, cauchy_allocate
 from repro.core.hardware import CORE_REGIONS, make_node_configs
 from repro.core.modelspec import PAPER_MODELS
@@ -95,6 +96,138 @@ def test_init_penalty_prefers_stability():
     a2 = allocate(prob2)
     assert a2.init_penalty <= 1e-6
     assert a2.instances == a1.instances
+
+
+def _demands(dec_demand=800.0):
+    out = []
+    for m in MODELS:
+        wl = WLS[m.name]
+        out.append(Demand(m.name, "prefill",
+                          dec_demand * wl.avg_prompt / wl.avg_output))
+        out.append(Demand(m.name, "decode", dec_demand))
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 30), st.floats(100, 3000))
+def test_columnar_matches_reference_objective(seed, abundance, dec_demand):
+    """Tentpole equivalence: the columnar assembly lands on the same
+    MILP objective as the seed per-var path (within the MIP gap), on
+    abundant and scarce availability alike."""
+    rng = np.random.default_rng(seed)
+    avail = {(r.name, c.name): int(rng.integers(0, abundance + 1))
+             for r in CORE_REGIONS for c in CONFIGS}
+    demands = _demands(dec_demand)
+    ref = allocate_reference(AllocProblem(
+        CORE_REGIONS, CONFIGS, dict(avail), demands, LIB, time_limit=30))
+    col = allocate(AllocProblem(
+        CORE_REGIONS, CONFIGS, dict(avail), demands, LIB, time_limit=30))
+    assert ref.ok and col.ok
+    rel = abs(ref.objective - col.objective) \
+        / max(abs(ref.objective), 1e-9)
+    assert rel <= 5e-4, (ref.objective, col.objective)
+    _check_alloc(col, avail, demands)
+
+
+def test_allocator_state_reuses_structure_across_epochs():
+    """Epoch re-solves rewrite bounds/RHS in the assembled structure —
+    no full rebuild — and stay valid under changed availability,
+    demand and current counts."""
+    state = AllocatorState()
+    builds = []
+    orig_build = state._build
+    state._build = lambda p: (builds.append(1), orig_build(p))[1]
+    rng = np.random.default_rng(7)
+    prev = {}
+    coo_id = None
+    for epoch in range(4):
+        avail = {(r.name, c.name): int(rng.integers(2, 30))
+                 for r in CORE_REGIONS for c in CONFIGS}
+        demands = _demands(400.0 + 300.0 * epoch)
+        alloc = state(AllocProblem(CORE_REGIONS, CONFIGS, avail, demands,
+                                   LIB, current=prev, time_limit=30))
+        assert alloc.ok
+        _check_alloc(alloc, avail, demands)
+        prev = dict(alloc.instances)
+        if coo_id is None:
+            coo_id = id(state._coo_data)
+        else:                       # same assembled arrays, epoch over epoch
+            assert id(state._coo_data) == coo_id
+    assert len(builds) == 1, "re-solves must not rebuild the structure"
+    # changing the demand-key shape rebuilds transparently
+    alloc = state(AllocProblem(CORE_REGIONS, CONFIGS, avail,
+                               demands[:2], LIB, time_limit=30))
+    assert alloc.ok and len(builds) == 2
+
+
+def test_warm_started_epochs_match_reference():
+    """Incumbent pruning must be lossless: epoch 2+ solves (where the
+    previous solution tightens v_ub and the shortfall big-M) land on
+    the same objective as a cold reference solve of the same epoch."""
+    state = AllocatorState()
+    rng = np.random.default_rng(21)
+    cur = {}
+    for epoch in range(3):
+        avail = {(r.name, c.name): int(rng.integers(1, 25))
+                 for r in CORE_REGIONS for c in CONFIGS}
+        demands = _demands(float(rng.uniform(200, 2500)))
+        warm = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
+                                  demands, LIB, current=dict(cur),
+                                  time_limit=30))
+        cold = allocate_reference(AllocProblem(
+            CORE_REGIONS, CONFIGS, dict(avail), demands, LIB,
+            current=dict(cur), time_limit=30))
+        assert warm.ok and cold.ok
+        rel = abs(warm.objective - cold.objective) \
+            / max(abs(cold.objective), 1e-9)
+        assert rel <= 5e-4, (epoch, warm.objective, cold.objective)
+        cur = dict(warm.instances)
+
+
+def test_state_rebuilds_when_empty_pair_fills():
+    """A (model, phase) that had zero templates at build time must be
+    re-checked on later solves — lib.add may have filled it since."""
+    from repro.core.templates import TemplateLibrary
+    m = MODELS[0].name
+    lib2 = TemplateLibrary(config_by_name=dict(LIB.config_by_name))
+    lib2.add((m, "decode"), [], {})
+    demands = [Demand(m, "decode", 500.0)]
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    state = AllocatorState()
+    a1 = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                            lib2, time_limit=30))
+    assert a1.ok and not a1.instances and a1.unmet
+    lib2.add((m, "decode"), LIB.get(m, "decode"), {})
+    a2 = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                            lib2, time_limit=30))
+    assert a2.ok and a2.instances and not a2.unmet
+
+
+def test_incumbent_fallback_on_solver_failure(monkeypatch):
+    """When HiGHS fails/times out mid-run, the state returns the
+    previous epoch's solution clamped to the new availability instead
+    of an empty allocation."""
+    from repro.solver.milp import MilpModel, SolveResult
+    state = AllocatorState()
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    demands = _demands(600.0)
+    a1 = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                            LIB, time_limit=30))
+    assert a1.ok and a1.instances and not a1.fallback
+
+    def fail(self, **kw):
+        return SolveResult(False, None, np.inf, 0.0, 2)
+    monkeypatch.setattr(MilpModel, "solve", fail)
+    # availability tightens: the incumbent must be clamped + repaired
+    tight = {k: max(v - 15, 0) for k, v in avail.items()}
+    a2 = state(AllocProblem(CORE_REGIONS, CONFIGS, tight, demands, LIB,
+                            current=dict(a1.instances), time_limit=30))
+    assert a2.ok and a2.fallback
+    _check_alloc(a2, tight, demands)    # clamped incumbent is feasible
+    # a fresh state has no incumbent: failure surfaces as ok=False
+    a3 = AllocatorState()(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
+                                       demands, LIB, time_limit=30))
+    assert not a3.ok and not a3.instances
 
 
 def test_scarce_availability_reports_unmet():

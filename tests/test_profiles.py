@@ -3,9 +3,10 @@ import numpy as np
 import pytest
 
 from repro.core.hardware import DEVICE_TYPES, NodeConfig
-from repro.core.modelspec import PAPER_MODELS
 from repro.core.profiles import (ProfileTable, WorkloadStats,
-                                 decode_throughput, prefill_throughput)
+                                 decode_throughput, decode_throughput_row,
+                                 prefill_throughput)
+from repro.core.modelspec import PAPER_MODELS
 
 WL = WorkloadStats(avg_prompt=1024, avg_output=200)
 
@@ -53,6 +54,35 @@ def test_phase_affinity_matches_paper():
     assert eff(l40s, "prefill", 1.2) >= eff(a100, "prefill", 1.2) * 0.9
     # decode: A100's bandwidth advantage shows up
     assert eff(a100, "decode", 0.06) > 0
+
+
+@pytest.mark.parametrize("model", ["phi4-14b",       # dense
+                                   "gpt-oss-20b",    # MoE + hybrid attn
+                                   "qwen3-235b"])    # MoE, many layers
+def test_decode_row_bit_identical_to_scalar(model):
+    """The vectorized j-sweep (incl. its 40-step batch bisection) must
+    reproduce the scalar decode model bit-for-bit — ProfileTable rows
+    feed template generation, so any drift would silently change every
+    library fingerprinted downstream."""
+    m = PAPER_MODELS[model]
+    for dev, k in (("L40S", 1), ("L4", 2), ("A100", 4), ("H100", 8)):
+        node = NodeConfig(DEVICE_TYPES[dev], k)
+        for budget in (0.01, 0.04, 0.12):
+            row = decode_throughput_row(m, node, budget, WL)
+            ref = np.array([decode_throughput(m, node, j, budget, WL)
+                            for j in range(1, m.n_layers + 1)])
+            assert np.array_equal(row, ref), (dev, k, budget)
+
+
+def test_decode_row_recurrent_branch():
+    from repro.core.modelspec import from_model_config
+    from repro.configs.registry import get_config
+    sm = from_model_config(get_config("xlstm-350m"))
+    node = NodeConfig(DEVICE_TYPES["A10G"], 1)
+    row = decode_throughput_row(sm, node, 0.06, WL)
+    ref = np.array([decode_throughput(sm, node, j, 0.06, WL)
+                    for j in range(1, sm.n_layers + 1)])
+    assert np.array_equal(row, ref)
 
 
 def test_recurrent_decode_ctx_independent():

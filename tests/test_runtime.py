@@ -7,7 +7,8 @@ run."""
 import numpy as np
 import pytest
 
-from repro.core.allocator import AllocProblem, Demand, allocate
+from repro.core.allocator import (AllocProblem, Allocation, Demand,
+                                  allocate)
 from repro.core.hardware import CORE_REGIONS, make_node_configs
 from repro.core.modelspec import PAPER_MODELS
 from repro.runtime.cluster import ClusterRuntime
@@ -19,9 +20,9 @@ WLS = {MODEL.name: workload_stats(MODEL.trace)}
 
 
 def _run(lib, fail_rate=0.0, n_epochs=3, rate=2.0, epoch_s=240.0,
-         sim_batched=True):
+         sim_batched=True, allocator_fn=allocate):
     rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS, lib,
-                        allocate, WLS, epoch_s=epoch_s,
+                        allocator_fn, WLS, epoch_s=epoch_s,
                         sim_batched=sim_batched)
     reqs = gen_requests(MODEL.name, MODEL.trace, rate, n_epochs * epoch_s,
                         seed=0)
@@ -97,6 +98,38 @@ def test_runtime_batched_matches_oracle(phi4_runtime_library):
     assert rt1.sim.dropped == rt2.sim.dropped
     assert {r.rid for r in rt1.sim.finished} == \
         {r.rid for r in rt2.sim.finished}
+
+
+def test_failed_solve_keeps_previous_allocation(phi4_runtime_library):
+    """Regression: a failed solve (ok=False, empty instances) used to be
+    treated as a scale-to-zero target, draining the whole cluster.  The
+    runtime must keep the previous epoch's allocation and flag the
+    epoch via EpochMetrics.solver_failed."""
+    calls = {"n": 0}
+
+    def flaky(prob):
+        calls["n"] += 1
+        if calls["n"] == 2:          # epoch 1 solve fails
+            return Allocation({}, {}, np.inf, 0.0,
+                              {(d.model, d.phase): d.tokens_per_s
+                               for d in prob.demands}, 0.0, 0, False)
+        return allocate(prob)
+
+    rt, res, _reqs = _run(phi4_runtime_library, allocator_fn=flaky)
+    good = res.epochs[0]
+    failed = res.epochs[1]
+    assert not good.solver_failed and failed.solver_failed
+    # the cluster was NOT drained: same composition as the epoch before
+    assert failed.n_drained == 0 and failed.n_new == 0
+    assert failed.n_instances == good.n_instances > 0
+    assert failed.cost_per_hour > 0
+    # shortfall is reported against THIS epoch's demands: the kept
+    # allocation still meets them, so no phantom (or stale) unmet
+    assert failed.unmet == {}
+    assert failed.solve_seconds == 0.0      # the failed solve's timing
+    # and the epoch after a successful re-solve is stable again
+    assert not res.epochs[2].solver_failed
+    assert res.epochs[2].goodput[MODEL.name] > 0
 
 
 def test_cost_accounting_matches_running_instances(phi4_runtime_library):

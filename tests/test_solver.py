@@ -64,3 +64,92 @@ def test_infeasible_detected():
     x = mdl.add_var(obj=1, lb=0, ub=5, integer=True)
     mdl.add_constr({x: 1}, lb=10)             # impossible
     assert not mdl.solve().ok
+
+
+# ------------------------------------------------- batched construction
+@st.composite
+def ranged_instances(draw):
+    """Instances with <=, ranged and equality rows (the shapes the
+    columnar allocator emits through add_constrs_coo)."""
+    n = draw(st.integers(2, 5))
+    m = draw(st.integers(1, 4))
+    obj = [draw(st.integers(-5, 5)) for _ in range(n)]
+    ubs = [draw(st.integers(1, 6)) for _ in range(n)]
+    integer = [draw(st.booleans()) for _ in range(n)]
+    rows = []
+    for _ in range(m):
+        coeffs = {j: draw(st.integers(-3, 3)) for j in range(n)}
+        kind = draw(st.integers(0, 2))
+        hi = draw(st.integers(0, 12))
+        if kind == 0:                          # one-sided <=
+            lo = -np.inf
+        elif kind == 1:                        # ranged
+            lo = hi - draw(st.integers(0, 8))
+        else:                                  # equality
+            lo = hi
+        rows.append((coeffs, float(lo), float(hi)))
+    return obj, ubs, integer, rows
+
+
+def _build_pervar(obj, ubs, integer, rows):
+    mdl = MilpModel()
+    for o, u, i in zip(obj, ubs, integer):
+        mdl.add_var(obj=float(o), lb=0.0, ub=float(u), integer=i)
+    for coeffs, lo, hi in rows:
+        mdl.add_constr({k: float(v) for k, v in coeffs.items()},
+                       lb=lo, ub=hi)
+    return mdl
+
+
+def _build_batched(obj, ubs, integer, rows):
+    mdl = MilpModel()
+    idx = mdl.add_vars(np.array(obj, dtype=float), lb=0.0,
+                       ub=np.array(ubs, dtype=float),
+                       integer=np.array(integer))
+    assert list(idx) == list(range(len(obj)))
+    data, ri, ci, lbs, his = [], [], [], [], []
+    for i, (coeffs, lo, hi) in enumerate(rows):
+        for j, v in coeffs.items():
+            data.append(float(v))
+            ri.append(i)
+            ci.append(j)
+        lbs.append(lo)
+        his.append(hi)
+    rid = mdl.add_constrs_coo(data, ri, ci, lb=np.array(lbs),
+                              ub=np.array(his))
+    assert len(rid) == len(rows)
+    return mdl
+
+
+@settings(max_examples=40, deadline=None)
+@given(ranged_instances())
+def test_batched_matches_pervar_and_bb(inst):
+    """add_vars/add_constrs_coo build the same model as the per-var API,
+    on both the HiGHS and the numpy branch-and-bound backends."""
+    obj, ubs, integer, rows = inst
+    r_ref = _build_pervar(*inst).solve(backend="scipy")
+    r_coo = _build_batched(*inst).solve(backend="scipy")
+    r_bb = _build_batched(*inst).solve(backend="numpy", time_limit=20)
+    assert r_ref.ok == r_coo.ok == r_bb.ok
+    if r_ref.ok:
+        assert abs(r_ref.obj - r_coo.obj) < 1e-5, (r_ref.obj, r_coo.obj)
+        assert abs(r_ref.obj - r_bb.obj) < 1e-5, (r_ref.obj, r_bb.obj)
+
+
+def test_mixed_pervar_and_coo_rows():
+    """Per-var rows and COO blocks can be interleaved; duplicate COO
+    entries accumulate (scipy.sparse semantics), matching _densify."""
+    def build():
+        mdl = MilpModel()
+        x, y = mdl.add_vars([-3.0, -2.0], ub=[10.0, 10.0], integer=True)
+        mdl.add_constr({int(x): 1.0, int(y): 1.0}, ub=7.0)
+        # 2x + y <= 10, with the x coefficient split across two entries
+        mdl.add_constrs_coo([1.0, 1.0, 1.0], [0, 0, 0], [x, x, y],
+                            ub=np.array([10.0]))
+        mdl.add_constr({int(y): 1.0}, lb=1.0)          # y >= 1
+        return mdl
+    for backend in ("scipy", "numpy"):
+        res = build().solve(backend=backend)
+        assert res.ok
+        assert abs(res.obj - (-17)) < 1e-6             # x=3, y=4
+        assert res.x[1] >= 1 - 1e-9

@@ -1,0 +1,110 @@
+"""Benchmark-regression gate.
+
+Compares freshly written ``artifacts/BENCH_*.json`` files against the
+committed reference points in ``tools/bench_reference.json`` and exits
+non-zero when any tracked metric regressed by more than 20%.
+
+Tracked metrics are noise-robust ratios/rates (speedups, combos/s) —
+never raw wall seconds, which swing ~2x on this shared container.  All
+metrics are higher-is-better.
+
+Usage:
+    python tools/check_bench.py            # compare, exit 1 on regression
+    python tools/check_bench.py --update   # rewrite the reference file
+    benchmarks/run.py --check              # compare after the full suite
+
+When a new benchmark lands, run it once and ``--update`` to commit its
+reference points alongside the code.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts")
+REF_PATH = os.path.join(ROOT, "tools", "bench_reference.json")
+THRESHOLD = 0.20        # fail when new < (1 - THRESHOLD) * reference
+
+
+def _load(name: str):
+    path = os.path.join(ART, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def extract_metrics() -> Dict[str, float]:
+    """Flatten the tracked metrics of every BENCH_*.json present."""
+    out: Dict[str, float] = {}
+    d = _load("BENCH_sim_loop.json")
+    if d:
+        for r in d.get("results", []):
+            out[f"sim_loop_speedup_{r['scenario']}"] = r["speedup"]
+    d = _load("BENCH_template_gen.json")
+    if d:
+        for r in d.get("results", []):
+            out[f"template_gen_{r['solver']}_nmax{r['n_max']}"
+                f"_combos_per_s"] = r["combos_per_s"]
+    d = _load("BENCH_allocator.json")
+    if d:
+        for r in d.get("results", []):
+            tag = r["scale"]
+            out[f"allocator_build_speedup_{tag}"] = r["build_speedup"]
+            out[f"allocator_update_speedup_{tag}"] = r["update_speedup"]
+            out[f"allocator_objective_ok_{tag}"] = \
+                1.0 if r.get("objective_ok") else 0.0
+    return out
+
+
+def check(threshold: float = THRESHOLD) -> int:
+    fresh = extract_metrics()
+    if not os.path.exists(REF_PATH):
+        print(f"check_bench: no reference file at {REF_PATH}; "
+              f"run with --update to create it")
+        return 1
+    with open(REF_PATH) as f:
+        ref = json.load(f)
+    failures = []
+    for name, ref_val in sorted(ref.items()):
+        new_val = fresh.get(name)
+        if new_val is None:
+            failures.append(f"{name}: missing from fresh artifacts "
+                            f"(reference {ref_val:.3g})")
+            continue
+        floor = (1.0 - threshold) * ref_val
+        status = "ok" if new_val >= floor else "REGRESSED"
+        print(f"{name:48s} ref={ref_val:10.3g} new={new_val:10.3g} "
+              f"[{status}]")
+        if new_val < floor:
+            failures.append(f"{name}: {new_val:.3g} < "
+                            f"{floor:.3g} (-{threshold:.0%} of "
+                            f"{ref_val:.3g})")
+    for name in sorted(set(fresh) - set(ref)):
+        print(f"{name:48s} new={fresh[name]:10.3g} [untracked — "
+              f"run --update to pin]")
+    if failures:
+        print("\nBENCH REGRESSIONS:\n  " + "\n  ".join(failures))
+        return 1
+    print(f"\ncheck_bench: {len(ref)} reference metrics within "
+          f"{threshold:.0%}")
+    return 0
+
+
+def update() -> int:
+    fresh = extract_metrics()
+    if not fresh:
+        print("check_bench: no BENCH_*.json artifacts to pin")
+        return 1
+    with open(REF_PATH, "w") as f:
+        json.dump(fresh, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"check_bench: pinned {len(fresh)} metrics to {REF_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(update() if "--update" in sys.argv[1:] else check())
