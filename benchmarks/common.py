@@ -21,7 +21,8 @@ from repro.core.baselines import homo_library
 from repro.core.hardware import (CORE_CONFIGS, CORE_REGIONS, EXT_CONFIGS,
                                  EXT_REGIONS)
 from repro.core.modelspec import CORE_MODELS, EXT_MODELS, PAPER_MODELS
-from repro.core.templates import build_library
+from repro.core.templates import (TemplateLibrary, build_library,
+                                  generation_fingerprint)
 from repro.traces.workloads import (default_base_availability,
                                     gen_availability, gen_requests,
                                     workload_stats)
@@ -30,21 +31,21 @@ ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 FAST = os.environ.get("BENCH_FAST", "1") != "0"
 
 # template-generation caps. The memoized/vectorized PlacementCache path
-# (repro.core.placement, ~35x) retired the old BENCH_FAST trim of
-# (n_max=4, rho=8) for the core 12-config setup, which now always runs
-# the paper defaults (6, 12). The extended 20-config setup enumerates
-# 1.48M combos at n_max=6 (~500 combos/s on this 1-core container ->
-# ~40 min), so FAST caps it at n_max=5 (~370k combos, ~5 min one-time,
-# cached; the seed FAST used n_max=4 AND rho=8) and BENCH_FAST=0 runs
-# the full paper default.
+# (repro.core.placement, ~35x, PR 1) retired the old BENCH_FAST trim of
+# (n_max=4, rho=8) for the core 12-config setup, and the level-wise
+# dominance-pruned frontier (repro.core.templates._frontier_generate,
+# PR 4) retired the extended-setup n_max=5 cap: the full 20-config
+# extended library at the paper defaults (n_max=6, rho=12) now builds
+# in single-digit minutes on this 1-core container (one-time, cached),
+# so every scenario always runs the paper parameters.
 N_MAX = 6
-N_MAX_EXT_FAST = 5
 RHO = 12.0
 
 
 def n_max_for(configs) -> int:
-    """Scenario-aware template-generation cap (see note above)."""
-    return N_MAX_EXT_FAST if (FAST and len(configs) > 12) else N_MAX
+    """Template-generation cap — the paper default for every scenario
+    since the PR-4 frontier (see note above)."""
+    return N_MAX
 
 
 def scenario(extended: bool = False):
@@ -56,41 +57,75 @@ def scenario(extended: bool = False):
     return models, configs, regions, wls
 
 
+def _homo_fingerprint(models, configs, wls, n_max, rho):
+    """Everything a homo_library build depends on: one per-config
+    generation fingerprint per (model, phase) — mirrors
+    tests/_libcache.py so stale pickles never survive a generation
+    change (n_max/rho/SLO/workload drift or a GENERATION_VERSION bump)."""
+    return tuple(
+        generation_fingerprint(m, phase, [c], wls[m.name], n_max, rho,
+                               True, "fast", None)
+        for m in models for phase in ("prefill", "decode")
+        for c in sorted(configs, key=lambda c: c.name))
+
+
 def cached_library(name: str, models, configs, wls, homo: bool = False,
                    n_max: int = None, rho: float = None):
+    """Disk-cached Serving-Template library, fingerprint-checked.
+
+    A cached pickle is only served when every (model, phase) pair's
+    generation fingerprint still matches; otherwise the affected pairs
+    are regenerated (Coral libraries incrementally via
+    ``build_library(reuse=...)``, homogeneous ones wholesale) and the
+    pickle is rewritten.
+    """
     n_max = n_max or n_max_for(configs)
     rho = rho or RHO
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, f"lib_{name}_{'homo' if homo else 'coral'}"
                              f"_{n_max}_{rho}.pkl")
+    cached = None
     if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+        try:
+            with open(path, "rb") as f:
+                cached = pickle.load(f)
+        except Exception:                               # noqa: BLE001
+            cached = None
     t0 = time.time()
     if homo:
+        fp = _homo_fingerprint(list(models.values()), configs, wls,
+                               n_max, rho)
+        if isinstance(cached, dict) and cached.get("fp") == fp:
+            return cached["lib"]
         lib = homo_library(list(models.values()), configs, wls,
                            n_max=n_max, rho=rho)
+        blob = {"fp": fp, "lib": lib}
     else:
-        # incremental rebuild: seed from the newest cached Coral library
-        # with matching (n_max, rho) — other caps are guaranteed
-        # fingerprint misses; (model, phase) pairs whose generation
-        # fingerprint (config universe, n_max, rho, SLO, workload) is
-        # unchanged are reused
-        reuse = None
-        pat = os.path.join(ART, f"lib_*_coral_{n_max}_{rho}.pkl")
-        for cand in sorted(glob.glob(pat),
-                           key=os.path.getmtime, reverse=True):
-            try:
-                with open(cand, "rb") as f:
-                    reuse = pickle.load(f)
-                break
-            except Exception:                           # noqa: BLE001
-                continue
+        if not isinstance(cached, TemplateLibrary):
+            cached = None
+        reuse = cached
+        if reuse is None:
+            # cold start: seed from the newest cached Coral library
+            # with matching (n_max, rho) — every reused (model, phase)
+            # pair is still fingerprint-gated by build_library
+            pat = os.path.join(ART, f"lib_*_coral_{n_max}_{rho}.pkl")
+            for cand in sorted(glob.glob(pat),
+                               key=os.path.getmtime, reverse=True):
+                try:
+                    with open(cand, "rb") as f:
+                        reuse = pickle.load(f)
+                    break
+                except Exception:                       # noqa: BLE001
+                    continue
         lib = build_library(list(models.values()), configs, wls,
                             n_max=n_max, rho=rho, reuse=reuse)
+        if cached is not None and all(
+                s.get("reused") for s in lib.stats.values()):
+            return cached                   # unchanged: keep mtime
+        blob = lib
     lib.build_seconds = time.time() - t0
     with open(path, "wb") as f:
-        pickle.dump(lib, f)
+        pickle.dump(blob, f)
     return lib
 
 

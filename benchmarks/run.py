@@ -2,8 +2,11 @@
 # CSV (also written to artifacts/bench_results.csv).
 #
 # Set BENCH_FAST=0 for the full-scale (paper-parameter) runs; the default
-# trims trace durations and the (N_max, rho) caps so the whole suite
-# completes on this 1-core CPU container.
+# trims trace durations so the whole suite completes on this 1-core CPU
+# container.
+#
+# ``--only a,b,c``: run only the named jobs (see the ``jobs`` table) —
+# the subset CI's bench smoke drives (tools/ci.sh).
 #
 # ``--check``: after the suite, compare the freshly written
 # artifacts/BENCH_*.json against the committed reference points in
@@ -41,6 +44,19 @@ def main() -> None:
         ("roofline_single", lambda: roofline.run("16x16")),
         ("roofline_multi", lambda: roofline.run("2x16x16")),
     ]
+    args = sys.argv[1:]
+    if "--only" in args:
+        i = args.index("--only") + 1
+        if i >= len(args):
+            raise SystemExit("run.py --only: requires a comma-separated "
+                             "job list")
+        sel = args[i].split(",")
+        known = {n for n, _ in jobs}
+        unknown = [s for s in sel if s not in known]
+        if unknown:
+            raise SystemExit(f"run.py --only: unknown job(s) {unknown}; "
+                             f"choose from {sorted(known)}")
+        jobs = [(n, f) for n, f in jobs if n in sel]
     failures = []
     for name, fn in jobs:
         try:
@@ -54,7 +70,7 @@ def main() -> None:
     if failures:
         print(f"FAILED benchmarks: {failures}")
         raise SystemExit(1)
-    if "--check" in sys.argv[1:]:
+    if "--check" in args:
         from tools.check_bench import check
         raise SystemExit(check())
 

@@ -48,7 +48,8 @@ from repro.traces.workloads import gen_requests
 EPOCH_S = 360.0
 N_INST = 6                      # instances per model
 BACKLOG_X = 16.0                # queue depth per instance, in capacities
-STEADY_RATES = (2.0,) if FAST else (2.0, 6.0)
+STEADY_RATES_FULL = (2.0, 6.0)
+STEADY_RATES = STEADY_RATES_FULL[:1] if FAST else STEADY_RATES_FULL
 STEADY_DUR = 720.0
 
 
@@ -206,6 +207,12 @@ def run() -> None:
                           "decode_capacity": picks[m][1]}
                       for m in picks},
             "n_inst_per_model": N_INST, "backlog_x": BACKLOG_X,
+            # scenarios trimmed by BENCH_FAST — the bench gate skips
+            # exactly these reference metrics instead of failing on
+            # them (tools/check_bench.py)
+            "fast_trimmed": [f"steady_rate{r:g}"
+                             for r in STEADY_RATES_FULL
+                             if r not in STEADY_RATES],
             "speedup": drain_speedup,
             "results": results,
         }, f, indent=1)

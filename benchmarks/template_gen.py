@@ -1,15 +1,22 @@
 """Serving-Template generation scaling benchmark (offline stage 1).
 
-Times ``generate_templates`` on the paper's core 12-config setup
-(qwen3-32b decode — the heaviest (model, phase) of the core library) at
-n_max in {4, 5, 6}, fast path vs. the reference per-combo exact solver,
-and records the trajectory in ``artifacts/BENCH_template_gen.json`` so
-perf regressions in the offline pipeline are caught from this PR onward.
+Times ``generate_templates`` at two scales and records the trajectory
+in ``artifacts/BENCH_template_gen.json`` so perf regressions in the
+offline pipeline are caught from PR 1 onward:
+
+* core (paper 12-config setup), qwen3-32b decode — the heaviest
+  (model, phase) of the core library — at n_max in {4, 5, 6}, fast
+  path vs. the reference per-combo exact solver;
+* extended (paper 20-config setup), llama3-70b decode — a heavy
+  (model, phase) of the extended library (~200k combos at n_max=6) —
+  at n_max in {5, 6}, fast path only.
 
 Context: the seed per-combo solver took ~192-212s at the paper-default
-n_max=6 on this container; the memoized + vectorized PlacementCache path
-(repro.core.placement) brings that to ~6s while producing an identical
-post-prune template set.
+n_max=6 on the core setup; the memoized + vectorized PlacementCache
+path (PR 1) brought that to ~6s, and the level-wise dominance-pruned
+frontier (PR 4) runs the extended n_max=6 pair in ~1 min (was ~7 min),
+which is what lets the benchmark suite run the extended setup at the
+paper parameters instead of the old n_max=5 cap.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 from benchmarks.common import ART, Row
-from repro.core.hardware import CORE_CONFIGS
+from repro.core.hardware import CORE_CONFIGS, EXT_CONFIGS
 from repro.core.modelspec import PAPER_MODELS
 from repro.core.templates import generate_templates
 from repro.traces.workloads import workload_stats
@@ -32,38 +39,54 @@ from repro.traces.workloads import workload_stats
 MODEL = "qwen3-32b"
 PHASE = "decode"
 N_MAXES = (4, 5, 6)
+EXT_MODEL = "llama3-70b"
+EXT_N_MAXES = (5, 6)
 RHO = 12.0
 # the reference solver is ~16x slower at n_max=6; cap it where it stays
 # cheap — the fast path is equivalence-tested against it separately
 EXACT_N_MAX = 4
+# container timing noise ~2x on short runs: the frontier made the core
+# points 0.3-4s, so time them best-of-REPS (each repeat builds a fresh
+# PlacementCache); the long ext n_max=6 point stays single-shot
+REPS = 3
 
 
-def _one(solver: str, n_max: int, wl, model) -> dict:
-    t0 = time.time()
-    temps, stats = generate_templates(model, PHASE, CORE_CONFIGS, wl,
-                                      n_max=n_max, rho=RHO, solver=solver)
-    dt = time.time() - t0
-    return {"solver": solver, "n_max": n_max, "seconds": dt,
+def _one(solver: str, n_max: int, wl, model, configs, scale: str,
+         reps: int = REPS) -> dict:
+    best = None
+    for _ in range(reps):
+        t0 = time.time()
+        temps, stats = generate_templates(model, PHASE, configs, wl,
+                                          n_max=n_max, rho=RHO,
+                                          solver=solver)
+        dt = time.time() - t0
+        if best is None or dt < best[0]:
+            best = (dt, temps, stats)
+    dt, temps, stats = best
+    return {"solver": solver, "scale": scale, "n_max": n_max, "seconds": dt,
+            "reps": reps,
             "combos": stats["combos"], "templates": len(temps),
             "templates_raw": stats["templates_raw"],
+            "dominated": stats.get("dominated", 0),
             "combos_per_s": stats["combos"] / max(dt, 1e-9),
             "templates_per_s": len(temps) / max(dt, 1e-9)}
 
 
 def run() -> None:
+    results = []
     model = PAPER_MODELS[MODEL]
     wl = workload_stats(model.trace)
-    results = []
     for n_max in N_MAXES:
-        r = _one("fast", n_max, wl, model)
+        r = _one("fast", n_max, wl, model, CORE_CONFIGS, "core")
         results.append(r)
         us = r["seconds"] * 1e6 / max(r["combos"], 1)
         Row.add(f"template_gen_fast_nmax{n_max}", us,
                 f"{r['combos_per_s']:.0f}combos/s"
                 f";{r['templates_per_s']:.0f}templates/s"
                 f";{r['seconds']:.1f}s")
-    # reference-solver datapoint (cheap at EXACT_N_MAX) for the speedup row
-    r = _one("exact", EXACT_N_MAX, wl, model)
+    # reference-solver datapoint (cheap at EXACT_N_MAX) for the speedup
+    # row; ~20s per repeat, so best-of-2
+    r = _one("exact", EXACT_N_MAX, wl, model, CORE_CONFIGS, "core", reps=2)
     results.append(r)
     us = r["seconds"] * 1e6 / max(r["combos"], 1)
     fast_ref = next(x for x in results
@@ -72,10 +95,26 @@ def run() -> None:
     Row.add(f"template_gen_exact_nmax{EXACT_N_MAX}", us,
             f"{r['combos_per_s']:.0f}combos/s"
             f";fast_speedup={speedup:.1f}x")
+    # extended 20-config setup: the search space the n_max=5 cap used to
+    # hide — ~200k combos for this pair at n_max=6, mostly dominated
+    ext_model = PAPER_MODELS[EXT_MODEL]
+    ext_wl = workload_stats(ext_model.trace)
+    for n_max in EXT_N_MAXES:
+        r = _one("fast", n_max, ext_wl, ext_model, EXT_CONFIGS, "ext",
+                 reps=2 if n_max < 6 else 1)
+        results.append(r)
+        us = r["seconds"] * 1e6 / max(r["combos"], 1)
+        Row.add(f"template_gen_fast_ext_nmax{n_max}", us,
+                f"{r['combos_per_s']:.0f}combos/s"
+                f";dominated={r['dominated']}"
+                f";{r['seconds']:.1f}s")
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "BENCH_template_gen.json"), "w") as f:
-        json.dump({"model": MODEL, "phase": PHASE, "rho": RHO,
-                   "configs": [c.name for c in CORE_CONFIGS],
+        json.dump({"core": {"model": MODEL, "phase": PHASE,
+                            "configs": [c.name for c in CORE_CONFIGS]},
+                   "ext": {"model": EXT_MODEL, "phase": PHASE,
+                           "configs": [c.name for c in EXT_CONFIGS]},
+                   "rho": RHO,
                    "results": results}, f, indent=1)
 
 

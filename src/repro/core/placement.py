@@ -44,14 +44,24 @@ Three solvers, property-tested to agree:
 
    ``solve_batch`` further amortizes the per-combo numpy dispatch by
    processing all combos of one shape as a stacked (combos, partitions)
-   grid, visiting S levels best-tcap-bound-first so the incumbent prunes
-   the L-th-largest selections.
+   grid, visiting S levels best-bound-first so the incumbent prunes
+   the L-th-largest selections. Callers can seed the incumbent per
+   combo (``incumbents=``): only partitions whose bound — min of the
+   per-partition 1-layer cap and a per-(combo, S) aggregate bound
+   R_S[ceil(L/S)-1] — exceeds it are evaluated, and a ``None`` result
+   certifies the optimum equals the incumbent (the dominated-combo
+   prune behind ``generate_templates``' level-wise frontier). Stage
+   groups are interned by packed integer code so batch lookups stay
+   in array land (``_solve_batch_legacy`` keeps the tuple-keyed path
+   for inputs that overflow the packing).
 
    Measured on this container (qwen3-32b decode, core 12-config setup,
-   n_max=6, rho=12: 12,990 combos): 212s seed -> ~6s, ~35x, with a
-   bit-identical post-prune template set — throughputs equal to the last
-   ulp because group rows accumulate in the same order as the reference
-   (see tests/test_placement_fast.py and benchmarks/template_gen.py).
+   n_max=6, rho=12: 12,990 combos): 212s seed -> ~6s batch solver
+   (~35x, PR 1) -> ~2s with packed-code interning + frontier
+   incumbents (PR 4), with a bit-identical post-prune template set —
+   throughputs equal to the last ulp because group rows accumulate in
+   the same order as the reference (see tests/test_placement_fast.py,
+   tests/test_template_prune.py and benchmarks/template_gen.py).
 """
 from __future__ import annotations
 
@@ -198,6 +208,14 @@ def _partitions_by_shape(shape: Tuple[int, ...]):
     return cgroups, by_S
 
 
+CODE_BITS = 3                 # packed stage-group codes: 3 bits per config
+CODE_MASK = (1 << CODE_BITS) - 1
+# multiplicative slack covering the fp error of the vectorized R_S bound
+# (a <= 21-term matvec; worst-case relative error ~2e-15) so the bound
+# stays a true upper bound on the sequentially-accumulated stage rows
+_UB_INFLATE = 1.0 + 1e-12
+
+
 class PlacementCache:
     """Shared-subproblem store for ``optimal_placement_fast`` across a
     whole enumeration (one instance per (model, phase, SLO, workload);
@@ -208,6 +226,32 @@ class PlacementCache:
     far, plus the per-config base tables. ``solve`` gathers the rows of
     every partition of a combo and applies the closed-form bottleneck
     optimum (module docstring, solver 3) in one batched pass per S.
+
+    ``solve_batch``/``solve_batch_counts`` accept per-combo *incumbent*
+    throughputs: a combo's search starts from its incumbent and only
+    partitions whose upper bound exceeds it are evaluated; the result is
+    ``None`` when nothing strictly beats the incumbent. With the
+    incumbent set to the best throughput of any enumerated sub-combo
+    (see ``generate_templates``' frontier), a ``None`` is a lossless
+    dominated-combo prune: throughput is monotone non-decreasing under
+    adding nodes (every row is >= 0, so extending any stage of the
+    sub-combo's optimal partition preserves feasibility), hence
+    ``T(combo) == incumbent`` exactly and the combo's template would be
+    usage-dominated. Two bounds do the partition-level pruning:
+
+    * ``tcap`` — min over stages of the 1-layer row value (exact cap);
+    * the aggregate bound ``R_S[ceil(L/S)-1]`` where ``R_S`` is the
+      pointwise sum of *all* member rows at budget S: every stage row is
+      <= R_S, so a feasible T needs ceil(L/S) entries of R_S above it.
+      Computed for a whole batch as one matvec per S (rows are
+      non-increasing, so the k-th largest is a column pick) and inflated
+      by ``_UB_INFLATE`` to stay sound under fp summation differences.
+
+    Stage groups are interned by packed integer code (``CODE_BITS`` bits
+    per config) so batch lookups are array ops; combos whose counts or
+    config universe overflow the packing fall back to the original
+    tuple-keyed path (``_solve_batch_legacy``), which shares the same
+    row store.
     """
 
     def __init__(self, tables: Callable[[str, int], np.ndarray], L: int):
@@ -215,9 +259,12 @@ class PlacementCache:
         self.L = L
         self._base: Dict[int, Dict[str, np.ndarray]] = {}   # S -> name -> row
         self._gid: Dict[int, Dict[Tuple, int]] = {}         # S -> group -> gid
+        self._codegid: Dict[int, Dict[int, int]] = {}       # S -> code -> gid
         self._key: Dict[int, List[Tuple]] = {}              # S -> gid -> group
         self._rows: Dict[int, np.ndarray] = {}              # S -> (cap, L)
         self._n: Dict[int, int] = {}                        # S -> used rows
+        self._cfg_idx: Dict[str, int] = {}                  # name -> code slot
+        self._cfg_names: List[str] = []
 
     # ------------------------------------------------------ group registry
     def _base_row(self, name: str, S: int) -> np.ndarray:
@@ -227,35 +274,69 @@ class PlacementCache:
             row = per[name] = np.asarray(self.tables(name, S), dtype=float)
         return row
 
-    def _group_rows(self, S: int, keys: List[Tuple[Tuple[str, int], ...]]
-                    ) -> np.ndarray:
-        """gids for group ``keys`` ((name, count) tuples), registering and
-        summing rows for unseen groups."""
+    def _register_cfgs(self, names: Sequence[str]) -> np.ndarray:
+        """Packed-code slots for ``names``, assigning new slots on first
+        appearance. Slot order is first-appearance order; only identity
+        matters (codes are internal to this cache instance)."""
+        idx = self._cfg_idx
+        for nm in names:
+            if nm not in idx:
+                idx[nm] = len(self._cfg_names)
+                self._cfg_names.append(nm)
+        return np.array([idx[nm] for nm in names], dtype=np.int64)
+
+    def _register_key(self, S: int, key: Tuple[Tuple[str, int], ...]) -> int:
+        """gid for group ``key`` ((name, count) tuples, name-sorted),
+        registering and summing its row if unseen."""
         gid = self._gid.setdefault(S, {})
+        g = gid.get(key)
+        if g is not None:
+            return g
         rows = self._rows.get(S)
         if rows is None:
             rows = self._rows[S] = np.zeros((64, self.L))
             self._n[S] = 0
-        key_of = self._key.setdefault(S, [])
+        g = gid[key] = self._n[S]
+        self._key.setdefault(S, []).append(key)
+        self._n[S] += 1
+        if g >= rows.shape[0]:
+            rows = np.concatenate([rows, np.zeros_like(rows)])
+            self._rows[S] = rows
+        # accumulate members one by one in sorted-name order —
+        # bit-identical to the reference solver's sum(tables(...))
+        acc = rows[g]
+        for name, cnt in key:
+            base = self._base_row(name, S)
+            for _ in range(cnt):
+                acc += base
+        return g
+
+    def _group_rows(self, S: int, keys: List[Tuple[Tuple[str, int], ...]]
+                    ) -> np.ndarray:
+        """gids for group ``keys``, registering unseen groups."""
         out = np.empty(len(keys), dtype=np.int32)
         for i, key in enumerate(keys):
-            g = gid.get(key)
-            if g is None:
-                g = gid[key] = self._n[S]
-                key_of.append(key)
-                self._n[S] += 1
-                if g >= rows.shape[0]:
-                    rows = np.concatenate([rows, np.zeros_like(rows)])
-                    self._rows[S] = rows
-                # accumulate members one by one in sorted-name order —
-                # bit-identical to the reference solver's sum(tables(...))
-                acc = rows[g]
-                for name, cnt in key:
-                    base = self._base_row(name, S)
-                    for _ in range(cnt):
-                        acc += base
-            out[i] = g
+            out[i] = self._register_key(S, key)
         return out
+
+    def _map_codes(self, S: int, codes: np.ndarray) -> np.ndarray:
+        """gids for an array of packed group codes, registering unseen
+        codes (decoded into name-sorted keys, so rows are accumulated
+        exactly as in the tuple-keyed path)."""
+        cg = self._codegid.setdefault(S, {})
+        uniq, inv = np.unique(codes.ravel(), return_inverse=True)
+        gid_u = np.empty(len(uniq), dtype=np.int32)
+        for j, c in enumerate(uniq.tolist()):
+            g = cg.get(c)
+            if g is None:
+                items = []
+                for k, nm in enumerate(self._cfg_names):
+                    cnt = (c >> (CODE_BITS * k)) & CODE_MASK
+                    if cnt:
+                        items.append((nm, cnt))
+                g = cg[c] = self._register_key(S, tuple(sorted(items)))
+            gid_u[j] = g
+        return gid_u[inv].reshape(codes.shape)
 
     # -------------------------------------------------------------- solve
     def solve(self, node_names: Sequence[str],
@@ -263,7 +344,8 @@ class PlacementCache:
         return self.solve_batch([node_names], max_stages=max_stages)[0]
 
     def solve_batch(self, combos: Sequence[Sequence[str]],
-                    max_stages: Optional[int] = None
+                    max_stages: Optional[int] = None,
+                    incumbents: Optional[np.ndarray] = None
                     ) -> List[Optional[Placement]]:
         """``solve`` over many combos at once, batched by shape.
 
@@ -272,8 +354,135 @@ class PlacementCache:
         (combos, groups) matrix and the whole (combo, partition) grid
         evaluates with a handful of chunked numpy ops — instead of ~10
         small numpy calls per (combo, S). Same optima as per-combo
-        ``solve``; this is what ``generate_templates`` drives.
+        ``solve``. ``incumbents`` (optional, per combo): only return a
+        placement when its throughput strictly beats the incumbent (see
+        class docstring); this is what ``generate_templates`` drives.
         """
+        combos = [list(names) for names in combos]
+        uni = sorted({n for names in combos for n in names})
+        counts = np.zeros((len(combos), len(uni)), dtype=np.int64)
+        ix = {n: i for i, n in enumerate(uni)}
+        for ci, names in enumerate(combos):
+            for n in names:
+                counts[ci, ix[n]] += 1
+        return self.solve_batch_counts(counts, uni, max_stages=max_stages,
+                                       incumbents=incumbents)
+
+    def solve_batch_counts(self, counts, names: Sequence[str],
+                           max_stages: Optional[int] = None,
+                           incumbents: Optional[np.ndarray] = None
+                           ) -> List[Optional[Placement]]:
+        """Array-native ``solve_batch``: ``counts`` is an (N, len(names))
+        matrix of node counts per combo. Avoids re-deriving multiset
+        shapes from name lists — the path the level-wise frontier in
+        ``generate_templates`` uses."""
+        counts = np.asarray(counts, dtype=np.int64)
+        N, K = counts.shape
+        if N == 0:
+            return []
+        names = list(names)
+        slots = self._register_cfgs(names)
+        if (counts.max(initial=0) > CODE_MASK
+                or len(self._cfg_names) * CODE_BITS > 62):
+            name_lists = [[names[i] for i in range(K)
+                           for _ in range(int(row[i]))] for row in counts]
+            return self._solve_batch_legacy(name_lists, max_stages,
+                                            incumbents)
+        L = self.L
+        results: List[Optional[Placement]] = [None] * N
+        bestT = (np.zeros(N) if incumbents is None
+                 else np.asarray(incumbents, dtype=float).copy())
+        bestSP: List[Optional[Tuple[int, int]]] = [None] * N
+        # canonical per-row label order: count desc, then name asc
+        order = np.argsort(np.array(names))
+        rank = np.empty(K, dtype=np.int64)
+        rank[order] = np.arange(K)
+        perm = np.lexsort((np.broadcast_to(rank, counts.shape), -counts),
+                          axis=-1)
+        csort = np.take_along_axis(counts, perm, axis=1)
+        shapes, sinv = np.unique(csort, axis=0, return_inverse=True)
+        sinv = sinv.ravel()
+        pow_slot = np.int64(1) << (CODE_BITS * slots)
+        counts_f = counts.astype(float)
+        ub_cols: Dict[int, np.ndarray] = {}       # S -> per-name R_S[kidx]
+        for si in range(len(shapes)):
+            srow = shapes[si]
+            m = int(np.count_nonzero(srow))
+            if m == 0:
+                continue
+            members = np.nonzero(sinv == si)[0]
+            shape = tuple(int(x) for x in srow[:m])
+            Kn = int(srow.sum())
+            smax = min(max_stages or Kn, Kn, L)
+            cgroups, by_S = _partitions_by_shape(shape)
+            CG = np.zeros((len(cgroups), m), dtype=np.int64)
+            for u, key in enumerate(cgroups):
+                for lbl, cnt in key:
+                    CG[u, lbl] = cnt
+            lab_pow = pow_slot[perm[members][:, :m]]       # (C, m)
+            codes_all = lab_pow @ CG.T                     # (C, cgroups)
+            # pass 1: per-S aggregate bound, group registration and the
+            # per-partition cap for combos still above their incumbent
+            passes = []
+            for S in sorted(by_S):
+                if S > smax:
+                    continue
+                col = ub_cols.get(S)
+                if col is None:
+                    kidx = (L + S - 1) // S - 1
+                    col = ub_cols[S] = np.array(
+                        [self._base_row(nm, S)[kidx] for nm in names])
+                ub = (counts_f[members] @ col) * _UB_INFLATE
+                aidx = np.nonzero(ub > bestT[members])[0]
+                if not len(aidx):
+                    continue
+                used, local_idx = by_S[S]
+                gids = self._map_codes(S, codes_all[np.ix_(aidx, used)])
+                rows = self._rows[S][:self._n[S]]
+                grid = gids[:, local_idx]                  # (A, P, S)
+                bound = rows[:, 0][grid].min(axis=2)       # (A, P)
+                np.minimum(bound, ub[aidx, None], out=bound)
+                passes.append((S, members[aidx], grid, bound, rows))
+            # pass 2: visit S levels best-bound-first so the strongest
+            # incumbent forms early; bound <= bestT prunes the rest,
+            # leaving the expensive L-th-largest selection to few pairs
+            passes.sort(key=lambda p: -p[3].max(initial=0.0))
+            for S, gidx, grid, bound, rows in passes:
+                A, P = bound.shape
+                kth = S * L - L
+                chunk = max(1, 4_000_000 // max(P * S * L, 1))
+                for c0 in range(0, A, chunk):
+                    gi = gidx[c0:c0 + chunk]
+                    bc = bound[c0:c0 + chunk]
+                    live = bc > bestT[gi, None]
+                    if not live.any():
+                        continue
+                    idx = np.nonzero(live)
+                    g = grid[c0:c0 + chunk]
+                    vals = rows[g[idx]].reshape(len(idx[0]), S * L)
+                    vL = np.partition(vals, kth, axis=1)[:, kth]
+                    T = np.minimum(vL, bc[idx])
+                    T[vL <= 0] = 0.0
+                    Tf = np.zeros(bc.shape)
+                    Tf[idx] = T
+                    pbest = np.argmax(Tf, axis=1)
+                    tbest = Tf[np.arange(len(pbest)), pbest]
+                    for j in np.nonzero(tbest > bestT[gi])[0]:
+                        bestT[gi[j]] = tbest[j]
+                        bestSP[gi[j]] = (S, g[j, pbest[j]])
+        for ci in range(N):
+            if bestSP[ci] is not None:
+                results[ci] = self._reconstruct(
+                    bestSP[ci][0], bestSP[ci][1], float(bestT[ci]))
+        return results
+
+    def _solve_batch_legacy(self, combos: Sequence[Sequence[str]],
+                            max_stages: Optional[int] = None,
+                            incumbents: Optional[np.ndarray] = None
+                            ) -> List[Optional[Placement]]:
+        """Tuple-keyed fallback for combos whose counts or config
+        universe overflow the packed codes. Same optima (and the same
+        row store) as ``solve_batch_counts``; no aggregate R_S bound."""
         results: List[Optional[Placement]] = [None] * len(combos)
         by_shape: Dict[Tuple[int, ...], List[Tuple[int, List[str]]]] = {}
         for ci, names in enumerate(combos):
@@ -286,12 +495,15 @@ class PlacementCache:
             by_shape.setdefault(shape, []).append((ci, labels))
 
         L = self.L
+        inc_all = (None if incumbents is None
+                   else np.asarray(incumbents, dtype=float))
         for shape, members in by_shape.items():
             cgroups, by_S = _partitions_by_shape(shape)
             K = sum(shape)
             smax = min(max_stages or K, K, L)
             C = len(members)
-            bestT = np.zeros(C)
+            bestT = (np.zeros(C) if inc_all is None
+                     else inc_all[[ci for ci, _ in members]].copy())
             bestSP: List[Optional[Tuple[int, np.ndarray]]] = [None] * C
             keys_per = [[None] * len(cgroups) for _ in range(C)]
             # pass 1: register groups and compute the cheap tcap bound

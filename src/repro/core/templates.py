@@ -9,26 +9,34 @@ Beyond the paper (DESIGN.md §6): usage-dominance Pareto pruning — a
 template is dropped if another template of the same (model, phase) has
 >= throughput and <= node usage of *every* config. Dominance in usage
 implies dominance in cost (any price vector) and in every availability
-constraint, so pruning is lossless for the online ILP.
+constraint, so pruning is lossless for the online ILP. Throughput ties
+break toward the smaller usage (``_template_order_key``), so a superset
+combo that gains nothing over a sub-combo is always the one dropped.
 
 Performance: the default ``solver="fast"`` path threads one
-``repro.core.placement.PlacementCache`` per (model, phase) through the
-combo enumeration, so partition structures and per-(stage-group, S) T̂
-rows are shared across the thousands of combos drawn from the same small
-config universe. Measured on this container (qwen3-32b decode, core
-12-config setup, n_max=6, rho=12, 12,990 combos): 212s with the seed
-per-combo exact solver -> ~6s, identical post-prune template set
-(12,755 templates, max throughput delta 0.0; prefill: 203s -> ~6s over
-12,980 templates). ``build_library(..., reuse=old_lib)`` skips every
+``repro.core.placement.PlacementCache`` per (model, phase) through a
+*level-wise frontier* (``_frontier_generate``): combos grow one node at
+a time and each is solved with its best enumerated sub-combo throughput
+as the incumbent, so dominated combos — the majority of the extended
+setup's search space — are discharged at the partition-bound stage and
+the post-prune template set falls out of the enumeration directly
+(``cross_check=True`` proves bit-identity against exhaustive
+enumeration + ``pareto_prune``). Measured on this container: qwen3-32b
+decode, core 12-config setup (n_max=6, rho=12, 12,990 combos): 212s
+with the seed per-combo exact solver -> ~2s; extended 20-config
+llama3-70b decode (n_max=6, 202k combos): ~7 min with the PR-1 batch
+solver -> ~60s, which is what lets the benchmark suite run the
+extended setup at the paper parameters (the old BENCH_FAST capped it
+at n_max=5). ``build_library(..., reuse=old_lib)`` skips every
 (model, phase) pair whose generation inputs (config universe, n_max,
-rho, SLO, workload) are unchanged — the incremental mode used by
-``benchmarks.common.cached_library`` and epoch runtimes when the config
-universe drifts.
+rho, SLO, workload, ``GENERATION_VERSION``) are unchanged — the
+incremental mode used by ``benchmarks.common.cached_library`` and
+epoch runtimes when the config universe drifts.
 """
 from __future__ import annotations
 
 import itertools
-import json
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -176,29 +184,106 @@ class TemplateLibrary:
         return sum(len(v) for v in self.templates.values())
 
 
+def _template_order_key(t: ServingTemplate):
+    """Deterministic dominance-compatible total order: descending
+    throughput, then ascending node count, then counts. Any potential
+    dominator (usage <=, throughput >=) of a template sorts strictly
+    before it — equal-throughput ties are broken toward the *smaller*
+    usage (a proper sub-multiset has strictly fewer nodes), so a
+    superset that gains nothing over a sub-combo is always dropped.
+    (The pre-PR-4 prune broke throughput ties by enumeration order,
+    which kept such redundant supersets whenever they happened to
+    enumerate first; dropping them is lossless for the allocator —
+    the kept sub-combo has <= usage, hence <= cost in every region.)"""
+    return (-t.throughput, t.n_nodes, t.counts)
+
+
 def pareto_prune(temps: List[ServingTemplate],
                  config_names: Sequence[str]) -> List[ServingTemplate]:
     """Drop usage-dominated templates (lossless, see module docstring).
 
-    Processing in descending-throughput order, every already-kept
-    template has throughput >= the candidate's, so dominance reduces to
-    componentwise usage <= (equal-usage duplicates kept once). Usage
-    vectors (counts <= 15) are packed into 5-bit SWAR fields, 12 configs
-    per uint64 word: ``a <= b`` componentwise iff every field's guard
-    bit survives ``(b | H) - a``, one subtract+mask per pair per word.
-    The scan then runs as blocked numpy passes — each block against all
-    previously kept words, then a short sequential pass inside the
-    block — ~100x faster than the seed's per-template Python loop on
-    paper-scale (~13k raw) libraries, where nearly every usage vector is
-    distinct and the scan effectively certifies an antichain.
+    A template is dominated iff another template's usage is a
+    sub-multiset of its own with throughput >= (equal-usage duplicates
+    kept once). Since usage counts sum to <= n_max, each template has at
+    most prod(count_i + 1) <= 2^n_max sub-multisets, so instead of the
+    all-pairs scan the pruned set is found by *box enumeration*: hash
+    every usage vector (packed integer code) to its best throughput,
+    then probe each template's sub-multiset codes — O(n * 2^n_max)
+    total, sub-quadratic in n, vectorized per usage shape with one
+    int-matmul for the probe codes. Inputs whose counts or dimensions
+    overflow the packing (or whose boxes are too large) fall back to the
+    blocked pairwise SWAR scan, which implements the same semantics.
+
+    Output is sorted by ``_template_order_key`` (deterministic).
     """
     if not temps:
         return temps
-    order = sorted(temps, key=lambda t: -t.throughput)
-    n = len(order)
-    d = len(config_names)
-    usage = np.array([[t.usage().get(c, 0) for c in config_names]
+    order = sorted(temps, key=_template_order_key)
+    names = list(config_names)
+    usage = np.array([[t.usage().get(c, 0) for c in names]
                       for t in order], dtype=np.int64)
+    thr = np.array([t.throughput for t in order], dtype=float)
+    kept = _pareto_mask_boxes(usage, thr)
+    if kept is None:
+        kept = _pareto_mask_pairwise(usage)
+    return [t for t, k in zip(order, kept) if k]
+
+
+def _pareto_mask_boxes(usage: np.ndarray, thr: np.ndarray,
+                       budget: float = 5e7) -> Optional[np.ndarray]:
+    """Keep-mask over rows sorted by ``_template_order_key`` via
+    sub-multiset (box) probing; ``None`` when the input doesn't fit the
+    packed codes or the total box volume exceeds ``budget``."""
+    n, d = usage.shape
+    bits = max(int(usage.max(initial=0)).bit_length(), 1)
+    if d * bits > 62:
+        return None
+    boxes = np.prod(usage + 1.0, axis=1)
+    if boxes.sum() > budget:
+        return None
+    pw = np.int64(1) << (np.int64(bits) * np.arange(d, dtype=np.int64))
+    codes = usage @ pw
+    uniq, first = np.unique(codes, return_index=True)
+    # rows are throughput-sorted, so the first row of a code group has
+    # the group's max throughput (and is the one duplicate kept)
+    bestT = thr[first]
+    kept = np.zeros(n, dtype=bool)
+    kept[first] = True
+    # per usage-shape: one delta matrix enumerates every proper
+    # sub-multiset, probe codes come from one int matmul
+    rankd = np.arange(d)
+    perm = np.lexsort((np.broadcast_to(rankd, usage.shape), -usage), axis=-1)
+    us = np.take_along_axis(usage, perm, axis=1)
+    shapes, sinv = np.unique(us, axis=0, return_inverse=True)
+    sinv = sinv.ravel()
+    for si in range(len(shapes)):
+        srow = shapes[si]
+        m = int(np.count_nonzero(srow))
+        if m == 0:
+            continue
+        members = np.nonzero(sinv == si)[0]
+        deltas = np.array(list(itertools.product(
+            *(range(int(c) + 1) for c in srow[:m]))), dtype=np.int64)[1:]
+        if not len(deltas):
+            continue
+        lab_pw = pw[perm[members][:, :m]]              # (C, m)
+        step = max(1, int(2_000_000 // max(len(deltas), 1)))
+        for c0 in range(0, len(members), step):
+            mem = members[c0:c0 + step]
+            sub = codes[mem, None] - lab_pw[c0:c0 + step] @ deltas.T
+            pos = np.searchsorted(uniq, sub)
+            pos_c = np.minimum(pos, len(uniq) - 1)
+            hit = (uniq[pos_c] == sub) & (bestT[pos_c] >= thr[mem, None])
+            kept[mem] &= ~hit.any(axis=1)
+    return kept
+
+
+def _pareto_mask_pairwise(usage: np.ndarray) -> np.ndarray:
+    """Keep-mask over rows sorted by ``_template_order_key`` via the
+    blocked pairwise scan (SWAR-packed when counts <= 15): every
+    already-kept row sorts before the candidate, so dominance reduces
+    to componentwise usage <=. Reference semantics for the box path."""
+    n, d = usage.shape
     if usage.max(initial=0) <= 15:
         # pack counts into 5-bit fields, 12 configs per uint64 word
         W = (d + 11) // 12
@@ -220,14 +305,14 @@ def pareto_prune(temps: List[ServingTemplate],
                 ok &= (t & guard[w]) == guard[w]
             return ok
     else:
-        # counts too large for the SWAR fields (n_max > 15): plain
-        # broadcast comparison, same semantics
+        # counts too large for the SWAR fields: plain broadcast
+        # comparison, same semantics
         packed = usage
 
         def dominates(ku, blk):
             return (ku[:, None, :] <= blk[None, :, :]).all(axis=2)
 
-    kept_idx: List[int] = []
+    mask = np.zeros(n, dtype=bool)
     kept = np.empty_like(packed)
     k = 0
     B, C = 256, 2048
@@ -245,10 +330,16 @@ def pareto_prune(temps: List[ServingTemplate],
         for i in cand:
             if k > k0 and dominates(kept[k0:k], blk[i:i + 1]).any():
                 continue
-            kept_idx.append(b0 + int(i))
+            mask[b0 + int(i)] = True
             kept[k] = blk[i]
             k += 1
-    return [order[i] for i in kept_idx]
+    return mask
+
+
+# bump when the produced template set changes for identical inputs
+# (e.g. the PR-4 dominance-compatible tie-break in pareto_prune), so
+# cached libraries and ``build_library(reuse=...)`` invalidate cleanly
+GENERATION_VERSION = 2
 
 
 def generation_fingerprint(model: ServedModel, phase: str,
@@ -265,7 +356,118 @@ def generation_fingerprint(model: ServedModel, phase: str,
     DeviceType's interconnect data) participates in the comparison.
     """
     cfg = tuple(sorted(configs, key=lambda c: c.name))
-    return (model, phase, cfg, wl, n_max, rho, prune, solver, max_stages)
+    return (GENERATION_VERSION, model, phase, cfg, wl, n_max, rho, prune,
+            solver, max_stages)
+
+
+def _frontier_generate(model: ServedModel, phase: str, slo_ms: float,
+                       configs: Sequence[NodeConfig], n_max: int,
+                       lo: float, hi: float, max_stages: Optional[int],
+                       cache: PlacementCache,
+                       solve_chunk: int = 32768) -> Optional[Tuple]:
+    """Level-wise (n -> n+1) pruned enumeration + solve (fast path).
+
+    Grows combos one node at a time (canonical non-decreasing config
+    order — the same multiset universe, memory window and fp memory
+    sums as ``enumerate_combos``), carrying the best throughput of every
+    *enumerated* combo in a code-indexed map. A level-n combo is solved
+    with its best enumerated immediate sub-combo throughput as the
+    incumbent: throughput is monotone non-decreasing under adding nodes,
+    so a solve that fails to strictly beat the incumbent proves
+    ``T(combo) == incumbent`` — the combo is usage-dominated by that
+    sub-combo and emits no template, without paying the partition scan
+    (``PlacementCache`` prunes it at the bound stage). Conversely a
+    strict improvement proves no enumerated sub-multiset can dominate
+    it, so the emitted set *is* the post-``pareto_prune`` set (emitted
+    templates of incomparable usage never dominate each other).
+
+    Dominated combos stay on the frontier — an extension of a dominated
+    combo can strictly beat all its sub-combos (e.g. a second copy of a
+    node that was individually too slow to hold a stage), so extending
+    only non-dominated combos would be lossy; skipping their *solve*
+    is what the incumbent makes free.
+
+    Returns ``(templates, n_combos, n_raw, n_dominated)`` or ``None``
+    when the config universe does not fit the frontier's packed codes
+    (caller falls back to exhaustive enumeration).
+    """
+    cfgs = sorted(configs, key=lambda c: c.mem_gb)
+    names = [c.name for c in cfgs]
+    K = len(cfgs)
+    bits = max(int(n_max).bit_length(), 1)
+    if K * bits > 62:
+        return None
+    mems = np.array([c.mem_gb for c in cfgs])
+    pw = np.int64(1) << (np.int64(bits) * np.arange(K, dtype=np.int64))
+    master_codes = np.empty(0, dtype=np.int64)
+    master_T = np.empty(0)
+    emitted: List[Tuple[np.ndarray, Placement]] = []
+    n_combos = n_raw = n_dom = 0
+    cur_counts = np.eye(K, dtype=np.int64)
+    cur_codes = pw.copy()
+    cur_mem = mems.copy()
+    cur_max = np.arange(K)
+    keep = cur_mem <= hi
+    cur_counts, cur_codes = cur_counts[keep], cur_codes[keep]
+    cur_mem, cur_max = cur_mem[keep], cur_max[keep]
+    for level in range(1, n_max + 1):
+        if level > 1:
+            parts = []
+            for i in range(K):
+                mask = (cur_max <= i) & (cur_mem + mems[i] <= hi)
+                if not mask.any():
+                    continue
+                nc = cur_counts[mask].copy()
+                nc[:, i] += 1
+                parts.append((nc, cur_codes[mask] + pw[i],
+                              cur_mem[mask] + mems[i],
+                              np.full(int(mask.sum()), i)))
+            if not parts:
+                break
+            cur_counts = np.concatenate([p[0] for p in parts])
+            cur_codes = np.concatenate([p[1] for p in parts])
+            cur_mem = np.concatenate([p[2] for p in parts])
+            cur_max = np.concatenate([p[3] for p in parts])
+        sol = np.nonzero(cur_mem >= lo)[0]
+        if len(sol):
+            sc, scode = cur_counts[sol], cur_codes[sol]
+            n_combos += len(sol)
+            inc = np.zeros(len(sol))
+            if master_codes.size:
+                for i in range(K):
+                    hidx = np.nonzero(sc[:, i] > 0)[0]
+                    if not len(hidx):
+                        continue
+                    sub = scode[hidx] - pw[i]
+                    pos = np.searchsorted(master_codes, sub)
+                    pos_c = np.minimum(pos, len(master_codes) - 1)
+                    vals = np.where(master_codes[pos_c] == sub,
+                                    master_T[pos_c], 0.0)
+                    inc[hidx] = np.maximum(inc[hidx], vals)
+            Ts = inc.copy()
+            for c0 in range(0, len(sol), solve_chunk):
+                cs = slice(c0, c0 + solve_chunk)
+                res = cache.solve_batch_counts(
+                    sc[cs], names, max_stages=max_stages,
+                    incumbents=inc[cs])
+                for j, r in enumerate(res):
+                    if r is not None:
+                        Ts[c0 + j] = r.throughput
+                        emitted.append((sc[c0 + j], r))
+            n_raw += int((Ts > 0).sum())
+            master_codes = np.concatenate([master_codes, scode])
+            master_T = np.concatenate([master_T, Ts])
+            o = np.argsort(master_codes)
+            master_codes, master_T = master_codes[o], master_T[o]
+    temps = []
+    for crow, pl in emitted:
+        cnts = tuple(sorted((names[i], int(crow[i]))
+                            for i in np.nonzero(crow)[0]))
+        temps.append(ServingTemplate(model.name, phase, slo_ms, cnts,
+                                     pl, pl.throughput))
+    temps.sort(key=_template_order_key)
+    n_dom = n_raw - len(temps)
+    return temps, n_combos, n_raw, n_dom
 
 
 def generate_templates(model: ServedModel, phase: str,
@@ -274,6 +476,7 @@ def generate_templates(model: ServedModel, phase: str,
                        solver: str = "fast", prune: bool = True,
                        max_stages: Optional[int] = None,
                        cache: Optional[PlacementCache] = None,
+                       cross_check: bool = False,
                        ) -> Tuple[List[ServingTemplate], Dict]:
     """The Serving Template generator for one (model, SLO, phase).
 
@@ -282,6 +485,15 @@ def generate_templates(model: ServedModel, phase: str,
     formulation). ``cache`` lets callers reuse a ``PlacementCache``
     across calls that share (model, phase, SLO, workload) — e.g. the
     per-config sub-universes of ``homo_library``.
+
+    The default ``solver="fast", prune=True`` path runs the level-wise
+    dominance-pruned frontier (``_frontier_generate``): dominated combos
+    are skipped at the partition-bound stage and the post-prune template
+    set falls out directly. ``cross_check=True`` (or env
+    ``CORAL_TEMPLATE_CROSSCHECK=1``) additionally runs the exhaustive
+    enumerate-all + ``pareto_prune`` reference on a fresh cache and
+    asserts the two template sets are identical (keys and bit-exact
+    throughputs); ``stats["cross_check"] == "ok"`` records the proof.
     """
     t0 = time.time()
     slo_ms = model.prefill_slo_ms if phase == "prefill" else model.decode_slo_ms
@@ -297,6 +509,52 @@ def generate_templates(model: ServedModel, phase: str,
     if solver not in ("fast", "exact", "ilp"):
         raise ValueError(f"unknown solver {solver!r}; "
                          f"expected 'fast', 'exact' or 'ilp'")
+
+    def _stats(n_combos, n_raw, n_temps, extra=None):
+        s = {"combos": n_combos, "templates_raw": n_raw,
+             "templates": n_temps, "seconds": time.time() - t0,
+             "n_max": n_max, "rho": rho,
+             "fingerprint": generation_fingerprint(
+                 model, phase, configs, wl, n_max, rho, prune, solver,
+                 max_stages)}
+        if extra:
+            s.update(extra)
+        return s
+
+    check = cross_check or (os.environ.get("CORAL_TEMPLATE_CROSSCHECK")
+                            not in (None, "", "0"))
+    if solver == "fast" and prune:
+        if cache is None:
+            cache = PlacementCache(tables, model.n_layers)
+        fr = _frontier_generate(model, phase, slo_ms, configs, n_max,
+                                lo, hi, max_stages, cache)
+        if fr is not None:
+            out, n_combos, n_raw, n_dom = fr
+            extra = {"dominated": n_dom, "frontier": True}
+            if check:
+                ref, ref_stats = _exhaustive_generate(
+                    model, phase, slo_ms, configs, wl, n_max, rho, lo, hi,
+                    "fast", True, max_stages,
+                    PlacementCache(tables, model.n_layers))
+                _assert_template_sets_equal(out, ref, n_raw,
+                                            ref_stats["templates_raw"])
+                extra["cross_check"] = "ok"
+            return out, _stats(n_combos, n_raw, len(out), extra)
+    out, ex_stats = _exhaustive_generate(model, phase, slo_ms, configs, wl,
+                                         n_max, rho, lo, hi, solver, prune,
+                                         max_stages, cache, tables)
+    return out, _stats(ex_stats["combos"], ex_stats["templates_raw"],
+                       len(out))
+
+
+def _exhaustive_generate(model, phase, slo_ms, configs, wl, n_max, rho,
+                         lo, hi, solver, prune, max_stages, cache,
+                         tables=None):
+    """Reference path: enumerate every combo, solve, then prune."""
+    if tables is None:
+        pt = ProfileTable(model, phase, slo_ms, wl)
+        by_name = {c.name: c for c in configs}
+        tables = lambda name, S: pt.table(by_name[name], S)
     out: List[ServingTemplate] = []
     if solver == "fast":
         if cache is None:
@@ -331,14 +589,26 @@ def generate_templates(model: ServedModel, phase: str,
             tuple(sorted(counts.items())), pl, pl.throughput))
     n_raw = len(out)
     if prune:
-        out = pareto_prune(out, sorted(by_name))
-    stats = {"combos": n_combos, "templates_raw": n_raw,
-             "templates": len(out), "seconds": time.time() - t0,
-             "n_max": n_max, "rho": rho,
-             "fingerprint": generation_fingerprint(
-                 model, phase, configs, wl, n_max, rho, prune, solver,
-                 max_stages)}
-    return out, stats
+        out = pareto_prune(out, sorted(c.name for c in configs))
+    return out, {"combos": n_combos, "templates_raw": n_raw}
+
+
+def _assert_template_sets_equal(got: List[ServingTemplate],
+                                ref: List[ServingTemplate],
+                                got_raw: int, ref_raw: int) -> None:
+    """Cross-check: the frontier's template set must be bit-identical
+    (keys and throughputs, in the same deterministic order) to the
+    exhaustive-enumeration + pareto_prune reference."""
+    ga = [(t.key, t.throughput) for t in got]
+    ra = [(t.key, t.throughput) for t in ref]
+    if got_raw != ref_raw or ga != ra:
+        only_g = set(ga) - set(ra)
+        only_r = set(ra) - set(ga)
+        raise AssertionError(
+            f"frontier/exhaustive template-set mismatch: "
+            f"raw {got_raw} vs {ref_raw}, kept {len(ga)} vs {len(ra)}, "
+            f"{len(only_g)} frontier-only (e.g. {sorted(only_g)[:2]}), "
+            f"{len(only_r)} reference-only (e.g. {sorted(only_r)[:2]})")
 
 
 def build_library(models: Sequence[ServedModel],

@@ -106,10 +106,12 @@ def test_generate_templates_golden_equality():
 
 
 def test_pareto_prune_high_counts_fallback():
-    """Counts > 15 overflow the SWAR fields; the scalar fallback must
-    produce the same kept set as a brute-force reference."""
+    """Counts up to 20 (beyond the SWAR fields' 15) must produce the
+    same kept set as a brute-force reference over the deterministic
+    dominance-compatible order."""
     from repro.core.placement import Placement
-    from repro.core.templates import ServingTemplate, pareto_prune
+    from repro.core.templates import (ServingTemplate, _template_order_key,
+                                      pareto_prune)
     r = np.random.default_rng(0)
     names = ["a", "b", "c"]
     temps = []
@@ -121,7 +123,7 @@ def test_pareto_prune_high_counts_fallback():
         temps.append(ServingTemplate("m", "decode", 80.0, counts, pl,
                                      float(r.uniform(1, 100))))
     kept = pareto_prune(temps, names)
-    order = sorted(temps, key=lambda t: -t.throughput)
+    order = sorted(temps, key=_template_order_key)
     ref = []
     for t in order:
         u = [t.usage().get(c, 0) for c in names]
@@ -129,6 +131,16 @@ def test_pareto_prune_high_counts_fallback():
             continue
         ref.append((u, t))
     assert [t.throughput for t in kept] == [t.throughput for _, t in ref]
+    # counts > 15 overflow the SWAR fields: exercise the broadcast
+    # branch of the pairwise scan directly against the same reference
+    # (pareto_prune itself routes these boxes through the hash path)
+    from repro.core.templates import _pareto_mask_pairwise
+    usage = np.array([[t.usage().get(c, 0) for c in names] for t in order],
+                     dtype=np.int64)
+    assert usage.max() > 15
+    mask = _pareto_mask_pairwise(usage)
+    assert [t.throughput for t, k in zip(order, mask) if k] \
+        == [t.throughput for _, t in ref]
 
 
 def test_build_library_incremental_reuse():

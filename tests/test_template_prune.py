@@ -1,0 +1,196 @@
+"""PR-4 dominance pruning: the level-wise frontier must produce the
+exact post-``pareto_prune`` template set of exhaustive enumeration, the
+box-probing Pareto pass must match the pairwise reference on arbitrary
+usage vectors, and incumbent-gated ``solve_batch`` must stay equivalent
+to the reference solver."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.hardware import make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.placement import Placement, PlacementCache, \
+    optimal_placement_exact
+from repro.core.templates import (ServingTemplate, _pareto_mask_boxes,
+                                  _pareto_mask_pairwise,
+                                  _template_order_key, generate_templates,
+                                  pareto_prune)
+from repro.traces.workloads import workload_stats
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+CONFIGS = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
+
+
+# ------------------------------------------------- frontier equivalence
+@pytest.mark.parametrize("phase", ["prefill", "decode"])
+def test_frontier_equals_exhaustive(phase):
+    """Frontier fast path == exhaustive exact solver + pareto_prune:
+    identical keys and bit-exact throughputs, in identical order."""
+    fast, fstats = generate_templates(MODEL, phase, CONFIGS, WL, n_max=4,
+                                      rho=8.0, solver="fast")
+    assert fstats.get("frontier"), "fast path should take the frontier"
+    ref, rstats = generate_templates(MODEL, phase, CONFIGS, WL, n_max=4,
+                                     rho=8.0, solver="exact")
+    assert [(t.key, t.throughput) for t in fast] \
+        == [(t.key, t.throughput) for t in ref]
+    assert fstats["combos"] == rstats["combos"]
+    assert fstats["templates_raw"] == rstats["templates_raw"]
+    # every placement the frontier emits is a valid layer split
+    for t in fast:
+        assert sum(t.placement.layer_counts) == MODEL.n_layers
+        assert all(j >= 1 for j in t.placement.layer_counts)
+
+
+def test_cross_check_flag():
+    """cross_check=True runs the exhaustive reference in-process and
+    records the bit-identity proof in the stats."""
+    temps, stats = generate_templates(MODEL, "decode", CONFIGS, WL,
+                                      n_max=3, rho=8.0, cross_check=True)
+    assert stats["cross_check"] == "ok"
+    assert stats["templates"] == len(temps)
+    assert stats["dominated"] == stats["templates_raw"] - len(temps)
+
+
+def test_pruned_set_is_pareto_front():
+    """The kept set is exactly the Pareto front of the raw set: every
+    dropped template is dominated by a kept one, no kept template is
+    dominated by any other raw template."""
+    raw, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=4,
+                                rho=8.0, prune=False)
+    kept, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=4,
+                                 rho=8.0)
+    names = sorted({c.name for c in CONFIGS})
+
+    def u(t):
+        return tuple(t.usage().get(c, 0) for c in names)
+
+    def dominates(a, b):            # a dominates b (distinct usages)
+        return (a.throughput >= b.throughput and u(a) != u(b)
+                and all(x <= y for x, y in zip(u(a), u(b))))
+
+    kept_keys = {t.key for t in kept}
+    for t in raw:
+        if t.key in kept_keys:
+            assert not any(dominates(o, t) for o in raw)
+        else:
+            assert any(dominates(o, t) for o in kept)
+
+
+def test_equal_throughput_superset_dropped():
+    """A superset combo that gains no throughput over a sub-combo must
+    be pruned (the pre-PR-4 tie-break kept whichever enumerated first)."""
+    def tmpl(counts, thr):
+        nodes = tuple(n for n, c in counts for _ in range(c))
+        return ServingTemplate("m", "decode", 80.0, counts,
+                               Placement(1, (4,), (nodes,), thr), thr)
+
+    small = tmpl((("a", 1),), 10.0)
+    superset = tmpl((("a", 1), ("b", 2)), 10.0)
+    better = tmpl((("b", 2),), 12.0)
+    kept = pareto_prune([superset, small, better], ["a", "b"])
+    assert [t.counts for t in kept] == [(("b", 2),), (("a", 1),)]
+    # order is the deterministic dominance-compatible key
+    assert kept == sorted(kept, key=_template_order_key)
+
+
+# ------------------------------------------- box vs pairwise property
+@st.composite
+def _usage_case(draw):
+    n = draw(st.integers(2, 60))
+    d = draw(st.integers(1, 5))
+    maxc = draw(st.integers(1, 9))
+    quant = draw(st.integers(1, 6))     # coarse throughputs force ties
+    rows, thr = [], []
+    for i in range(n):
+        rows.append([draw(st.integers(0, maxc)) for _ in range(d)])
+        thr.append(draw(st.integers(1, quant)) * 7.5)
+    return rows, thr
+
+
+@settings(max_examples=120, deadline=None)
+@given(_usage_case())
+def test_box_prune_matches_pairwise(case):
+    """Property: the sub-quadratic box pass and the pairwise reference
+    keep exactly the same rows on random usage vectors (with heavy
+    throughput ties), after the shared dominance-compatible sort."""
+    rows, thr = case
+    order = sorted(range(len(rows)),
+                   key=lambda i: (-thr[i], sum(rows[i]), tuple(rows[i])))
+    usage = np.array([rows[i] for i in order], dtype=np.int64)
+    t = np.array([thr[i] for i in order], dtype=float)
+    got = _pareto_mask_boxes(usage, t)
+    assert got is not None, "cases are sized to fit the box path"
+    ref = _pareto_mask_pairwise(usage)
+    assert got.tolist() == ref.tolist(), (usage.tolist(), t.tolist())
+
+
+def test_box_prune_budget_fallback():
+    """Oversized boxes must defer to the pairwise path (None)."""
+    usage = np.full((50, 8), 30, dtype=np.int64)
+    thr = np.arange(50, dtype=float)
+    assert _pareto_mask_boxes(usage, thr, budget=1e3) is None
+
+
+# -------------------------------------------------- incumbent solving
+def _make_tables(names, L, seed):
+    r = np.random.default_rng(seed)
+    base = {n: r.uniform(10, 200) for n in set(names)}
+    cache = {}
+
+    def tables(name, S):
+        key = (name, S)
+        if key not in cache:
+            j = np.arange(1, L + 1)
+            v = base[name] / (j ** (0.7 + 0.05 * S))
+            cut = r.integers(max(L // 2, 1), L + 1)
+            v = np.where(j <= cut, v, 0.0)
+            cache[key] = np.minimum.accumulate(v)
+        return cache[key]
+
+    return tables
+
+
+def test_solve_batch_incumbents_randomized():
+    """With an incumbent, solve_batch returns None iff the true optimum
+    does not strictly beat it, and the returned throughput is unchanged
+    when it does."""
+    for seed in range(60):
+        r = np.random.default_rng(seed)
+        K = int(r.integers(1, 7))
+        L = int(r.integers(2, 13))
+        pool = ["A", "B", "C", "D"]
+        names = [pool[r.integers(0, 4)] for _ in range(K)]
+        tables = _make_tables(names, L, seed)
+        cache = PlacementCache(tables, L)
+        pe = optimal_placement_exact(names, tables, L)
+        te = pe.throughput if pe else 0.0
+        for inc in (0.0, te * 0.5, te, te * 1.5):
+            got = cache.solve_batch([names], incumbents=np.array([inc]))[0]
+            if te > inc:
+                assert got is not None and got.throughput == te, \
+                    (seed, names, inc, te, got)
+            else:
+                assert got is None, (seed, names, inc, te, got)
+
+
+def test_throughput_monotone_in_nodes():
+    """The property the dominated-combo prune rests on: adding a node
+    never decreases the optimal throughput."""
+    for seed in range(40):
+        r = np.random.default_rng(seed + 500)
+        L = int(r.integers(2, 13))
+        pool = ["A", "B", "C", "D"]
+        K = int(r.integers(1, 5))
+        names = [pool[r.integers(0, 4)] for _ in range(K)]
+        tables = _make_tables(pool, L, seed)
+        base = optimal_placement_exact(names, tables, L)
+        tb = base.throughput if base else 0.0
+        for extra in pool:
+            ext = optimal_placement_exact(names + [extra], tables, L)
+            tx = ext.throughput if ext else 0.0
+            assert tx >= tb, (seed, names, extra, tb, tx)

@@ -9,19 +9,34 @@ never raw wall seconds, which swing ~2x on this shared container.  All
 metrics are higher-is-better.
 
 Usage:
-    python tools/check_bench.py            # compare, exit 1 on regression
-    python tools/check_bench.py --update   # rewrite the reference file
-    benchmarks/run.py --check              # compare after the full suite
+    python tools/check_bench.py                   # compare, exit 1 on
+                                                  # regression
+    python tools/check_bench.py --json out.json   # also write a
+                                                  # machine-readable
+                                                  # summary (CI step)
+    python tools/check_bench.py --require-all     # absent BENCH files
+                                                  # fail too (full gate)
+    python tools/check_bench.py --update          # rewrite the
+                                                  # reference file
+    benchmarks/run.py --check                     # compare after the
+                                                  # full suite
 
-When a new benchmark lands, run it once and ``--update`` to commit its
-reference points alongside the code.
+By default a reference metric whose *whole artifact file* is absent is
+skipped (so a partial ``run.py --only`` smoke — the CI path — gates
+only what it ran), as is a metric whose scenario the artifact
+explicitly lists in its ``fast_trimmed`` field (BENCH_FAST trims some
+scenarios, e.g. sim_loop's steady_rate6).  Any *other* missing metric
+— and, under ``--require-all``, every missing metric — fails, so a
+benchmark silently dropping a result is still caught.  When a new
+benchmark lands, run it once and ``--update`` to commit its reference
+points alongside the code.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
-from typing import Dict
+from typing import Dict, Tuple
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ART = os.path.join(ROOT, "artifacts")
@@ -47,8 +62,10 @@ def extract_metrics() -> Dict[str, float]:
     d = _load("BENCH_template_gen.json")
     if d:
         for r in d.get("results", []):
-            out[f"template_gen_{r['solver']}_nmax{r['n_max']}"
-                f"_combos_per_s"] = r["combos_per_s"]
+            scale = r.get("scale", "core")
+            tag = "" if scale == "core" else f"_{scale}"
+            out[f"template_gen_{r['solver']}{tag}"
+                f"_nmax{r['n_max']}_combos_per_s"] = r["combos_per_s"]
     d = _load("BENCH_allocator.json")
     if d:
         for r in d.get("results", []):
@@ -60,38 +77,106 @@ def extract_metrics() -> Dict[str, float]:
     return out
 
 
-def check(threshold: float = THRESHOLD) -> int:
+def _metric_file(name: str) -> str:
+    """Artifact file a reference metric comes from (by name prefix)."""
+    if name.startswith("sim_loop_"):
+        return "BENCH_sim_loop.json"
+    if name.startswith("template_gen_"):
+        return "BENCH_template_gen.json"
+    if name.startswith("allocator_"):
+        return "BENCH_allocator.json"
+    return ""
+
+
+def check(threshold: float = THRESHOLD, json_out: str = None,
+          require_all: bool = False) -> int:
     fresh = extract_metrics()
+    summary = {"threshold": threshold, "require_all": require_all,
+               "metrics": {}, "skipped_files": [], "failures": []}
     if not os.path.exists(REF_PATH):
         print(f"check_bench: no reference file at {REF_PATH}; "
               f"run with --update to create it")
+        summary["failures"].append("missing reference file")
+        summary["pass"] = False
+        _write_json(json_out, summary)
         return 1
     with open(REF_PATH) as f:
         ref = json.load(f)
     failures = []
+    skipped_files = sorted({
+        _metric_file(n) for n in ref
+        if n not in fresh and _metric_file(n)
+        and not os.path.exists(os.path.join(ART, _metric_file(n)))})
+    summary["skipped_files"] = skipped_files
+
+    def _fast_trimmed(name):
+        # the artifact names exactly which scenarios BENCH_FAST trimmed
+        d = _load(_metric_file(name))
+        return bool(d) and any(
+            scen and name.endswith(scen)
+            for scen in d.get("fast_trimmed", []))
+
     for name, ref_val in sorted(ref.items()):
         new_val = fresh.get(name)
+        entry = {"ref": ref_val, "new": new_val}
         if new_val is None:
-            failures.append(f"{name}: missing from fresh artifacts "
-                            f"(reference {ref_val:.3g})")
+            if require_all:
+                entry["status"] = "missing"
+                failures.append(f"{name}: missing from fresh artifacts "
+                                f"(reference {ref_val:.3g})")
+            elif _metric_file(name) in skipped_files:
+                entry["status"] = "skipped"
+                print(f"{name:48s} ref={ref_val:10.3g} "
+                      f"[skipped — artifact absent]")
+            elif _fast_trimmed(name):
+                entry["status"] = "skipped"
+                print(f"{name:48s} ref={ref_val:10.3g} "
+                      f"[skipped — trimmed under BENCH_FAST]")
+            else:
+                entry["status"] = "missing"
+                failures.append(f"{name}: missing from fresh artifacts "
+                                f"(reference {ref_val:.3g})")
+            summary["metrics"][name] = entry
             continue
         floor = (1.0 - threshold) * ref_val
-        status = "ok" if new_val >= floor else "REGRESSED"
+        ok = new_val >= floor
+        entry["ratio"] = new_val / ref_val if ref_val else None
+        entry["status"] = "ok" if ok else "regressed"
+        summary["metrics"][name] = entry
         print(f"{name:48s} ref={ref_val:10.3g} new={new_val:10.3g} "
-              f"[{status}]")
-        if new_val < floor:
+              f"[{'ok' if ok else 'REGRESSED'}]")
+        if not ok:
             failures.append(f"{name}: {new_val:.3g} < "
                             f"{floor:.3g} (-{threshold:.0%} of "
                             f"{ref_val:.3g})")
     for name in sorted(set(fresh) - set(ref)):
+        summary["metrics"][name] = {"ref": None, "new": fresh[name],
+                                    "status": "untracked"}
         print(f"{name:48s} new={fresh[name]:10.3g} [untracked — "
               f"run --update to pin]")
+    summary["failures"] = failures
+    summary["pass"] = not failures
+    _write_json(json_out, summary)
     if failures:
         print("\nBENCH REGRESSIONS:\n  " + "\n  ".join(failures))
         return 1
-    print(f"\ncheck_bench: {len(ref)} reference metrics within "
-          f"{threshold:.0%}")
+    checked = sum(1 for m in summary["metrics"].values()
+                  if m["status"] in ("ok", "regressed"))
+    print(f"\ncheck_bench: {checked} reference metrics within "
+          f"{threshold:.0%}"
+          + (f" ({len(skipped_files)} artifact file(s) absent, skipped)"
+             if skipped_files else ""))
     return 0
+
+
+def _write_json(path, summary) -> None:
+    if not path:
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"check_bench: wrote summary to {path}")
 
 
 def update() -> int:
@@ -99,12 +184,32 @@ def update() -> int:
     if not fresh:
         print("check_bench: no BENCH_*.json artifacts to pin")
         return 1
+    ref = {}
+    if os.path.exists(REF_PATH):
+        with open(REF_PATH) as f:
+            ref = json.load(f)
+    # re-pin only what was freshly measured; keep reference points whose
+    # artifact files were not produced in this (possibly partial) run
+    ref.update(fresh)
     with open(REF_PATH, "w") as f:
-        json.dump(fresh, f, indent=1, sort_keys=True)
+        json.dump(ref, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"check_bench: pinned {len(fresh)} metrics to {REF_PATH}")
     return 0
 
 
+def main(argv) -> int:
+    if "--update" in argv:
+        return update()
+    json_out = None
+    if "--json" in argv:
+        i = argv.index("--json") + 1
+        if i >= len(argv):
+            print("check_bench: --json requires a path argument")
+            return 2
+        json_out = argv[i]
+    return check(json_out=json_out, require_all="--require-all" in argv)
+
+
 if __name__ == "__main__":
-    sys.exit(update() if "--update" in sys.argv[1:] else check())
+    sys.exit(main(sys.argv[1:]))

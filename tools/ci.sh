@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a fast benchmark smoke with the
+# machine-readable regression gate.  Runs in the project's no-network /
+# no-pip container profile — nothing is installed here; numpy, scipy
+# and pytest must already be on the image (the workflow preflights
+# this).  Library pickles under artifacts/ are reused when present;
+# .github/workflows/ci.yml caches them keyed on
+# ``tools/lib_fingerprint.py`` so a cache hit skips every rebuild.
+#
+# Usage:
+#   tools/ci.sh              # tier-1 + bench smoke + gate
+#   tools/ci.sh --tests-only # tier-1 only
+#
+# CI_BENCH overrides the smoke's job list (see benchmarks/run.py
+# ``jobs``); the default stays on the small/core points — the extended
+# n_max=6 library build is exercised by the template_gen ext rows
+# without building the full extended library.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export BENCH_FAST="${BENCH_FAST:-1}"
+CI_BENCH="${CI_BENCH:-table1,template_gen,sim_loop,allocator}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--tests-only" ]]; then
+    exit 0
+fi
+
+echo "== bench smoke (${CI_BENCH}) =="
+python benchmarks/run.py --only "${CI_BENCH}"
+
+echo "== bench gate =="
+python tools/check_bench.py --json artifacts/bench_gate.json

@@ -1,0 +1,66 @@
+"""Print a stable digest of every template-library generation input.
+
+The benchmark suite and the test suite cache their Serving-Template
+libraries under ``artifacts/lib_*.pkl``; each cached (model, phase)
+pair is guarded by its ``generation_fingerprint`` (config universe,
+n_max, rho, SLO, workload, solver — and ``GENERATION_VERSION``, bumped
+whenever the produced set changes for identical inputs).  This tool
+hashes the fingerprints of every library the suites use, giving CI a
+cache key for the ``artifacts`` directory: the key drifts exactly when
+some library would be regenerated, so a cache hit means no rebuild.
+
+Usage:  PYTHONPATH=src python tools/lib_fingerprint.py
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)                  # for the benchmarks package
+
+from repro.core.hardware import make_node_configs                # noqa: E402
+from repro.core.modelspec import PAPER_MODELS                    # noqa: E402
+from repro.core.templates import generation_fingerprint          # noqa: E402
+from repro.traces.workloads import workload_stats                # noqa: E402
+
+
+def _pairs():
+    """(models, configs, n_max, rho) of every cached library in use."""
+    # benchmark scenarios (benchmarks/common.py: N_MAX/RHO paper
+    # defaults; allocator_bench pins the ext library at n_max=4)
+    from benchmarks.common import N_MAX, RHO, scenario
+    from benchmarks.allocator_bench import EXT_N_MAX
+    core_models, core_cfgs, _, core_wls = scenario(extended=False)
+    ext_models, ext_cfgs, _, ext_wls = scenario(extended=True)
+    yield list(core_models.values()), core_cfgs, core_wls, N_MAX, RHO
+    yield list(ext_models.values()), ext_cfgs, ext_wls, N_MAX, RHO
+    yield list(ext_models.values()), ext_cfgs, ext_wls, EXT_N_MAX, RHO
+    # test-suite libraries (tests/_libcache.py callers)
+    test_models = [PAPER_MODELS[m] for m in ("phi4-14b", "gpt-oss-20b")]
+    test_cfgs = make_node_configs(["L40S", "L4", "A10G"], sizes=(1, 2))
+    test_wls = {m.name: workload_stats(m.trace) for m in test_models}
+    yield test_models, test_cfgs, test_wls, 3, 8.0
+
+
+def digest() -> str:
+    h = hashlib.sha256()
+    for models, configs, wls, n_max, rho in _pairs():
+        for m in models:
+            for phase in ("prefill", "decode"):
+                fp = generation_fingerprint(m, phase, configs, wls[m.name],
+                                            n_max, rho, True, "fast", None)
+                h.update(repr(fp).encode())
+                # homo libraries fingerprint per-config sub-universes
+                for c in sorted(configs, key=lambda c: c.name):
+                    fp = generation_fingerprint(m, phase, [c], wls[m.name],
+                                                n_max, rho, True, "fast",
+                                                None)
+                    h.update(repr(fp).encode())
+    return h.hexdigest()
+
+
+if __name__ == "__main__":
+    print(digest())
