@@ -1,0 +1,189 @@
+"""Control-loop scenario benchmark (online stage, paper §5/§6.4).
+
+Runs the *closed* loop — estimator-driven demands + churn-aware
+re-solve triggers + transition-planned warm starts, no oracle inputs —
+against two references on each named control-plane scenario
+(repro.control.scenarios), over the core Serving-Template library:
+
+* ``oracle``  — truth per-epoch demands, re-solve every epoch: the
+  upper bound the paper's evaluation protocol assumes.
+* ``static``  — one solve against the demand observed at deployment
+  time (epoch 0 truth), never re-solved (reconcile still replaces
+  failed capacity *within* the frozen target, capped by availability):
+  what "provision once" buys.  Run-mean demand would be the wrong
+  baseline — the mean already encodes the whole future trace (a flash
+  crowd inflates it before the crowd arrives), which is exactly the
+  oracle knowledge a static deployment lacks.
+
+Reported per scenario (the tracked gate metrics are noise-robust
+ratios, all higher-is-better):
+
+* ``cost_parity``    = oracle cost / estimated cost — 1.0 means the
+  closed loop is as cheap as the oracle; the acceptance envelope is
+  >= 0.85 (within 15%).
+* ``goodput_parity`` = estimated coverage / oracle coverage, where
+  *coverage* is demand-weighted per-epoch goodput
+  ``mean_e min(goodput_e, demand_e) / mean_e demand_e`` — unlike raw
+  tokens/s it does not credit late backlog catch-up, so reactive lag
+  shows.  Envelope >= 0.85.
+* ``goodput_vs_static`` (flash_crowd, spot_preemption) — the closed
+  loop must beat the static allocation where adaptation matters.
+
+The first ``WARMUP`` epochs are excluded from cost/coverage: they mix
+the INIT_DELAY cold start (identical for all methods) with the
+estimator's spin-up from its prior, which is a one-off transient, not
+the steady-state behavior the gate tracks.  Resolve counts cover the
+whole run.
+
+Under BENCH_FAST the suite runs three scenarios (the two the
+acceptance criteria name plus diurnal); ``fast_trimmed`` lists the
+rest so the bench gate skips — not fails — their reference points.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+from benchmarks.common import ART, FAST, Row, cached_library, scenario
+from repro.control import (DemandEstimator, ReSolveController,
+                           SCENARIO_NAMES, TransitionPlanner, make_scenario)
+from repro.core.allocator import AllocatorState, Demand
+from repro.runtime.cluster import ClusterRuntime
+
+# identical epoch count in FAST and full mode: the gate compares a
+# metric against its pinned reference, so both must measure the same
+# configuration — BENCH_FAST only trims the *scenario list*
+N_EPOCHS = 10
+EPOCH_S = 240.0
+BASE_RATE = 2.0
+WARMUP = 2
+SEED = 2
+SCENARIOS_FAST = ("diurnal", "flash_crowd", "spot_preemption")
+
+
+class _StaticAllocator:
+    """Solve once (first epoch), then return the frozen allocation."""
+
+    def __init__(self):
+        self._inner = AllocatorState()
+        self._alloc = None
+
+    def __call__(self, prob):
+        if self._alloc is None:
+            self._alloc = self._inner(prob)
+        return self._alloc
+
+
+def _static_demands(sc):
+    """Deployment-time demand, frozen: epoch 0's truth every epoch."""
+    return [sc.truth_demands[0]] * sc.n_epochs
+
+
+def _coverage(res, sc):
+    """Demand-weighted goodput coverage over the post-warmup epochs.
+    The min is per model — one model's surplus (e.g. backlog catch-up)
+    must not credit another model's shortfall."""
+    cov = tot = 0.0
+    for e in res.epochs[WARMUP:]:
+        for d in sc.truth_demands[e.epoch]:
+            if d.phase != "decode":
+                continue
+            cov += min(e.goodput.get(d.model, 0.0), d.tokens_per_s)
+            tot += d.tokens_per_s
+    return cov / max(tot, 1e-9)
+
+
+def _one_run(mode, name, models, regions, configs, wls, lib):
+    # regenerate the scenario per run: the simulator mutates Request
+    # objects in place, so methods must never share a trace instance
+    sc = make_scenario(name, models, regions, configs, wls,
+                       n_epochs=N_EPOCHS, epoch_s=EPOCH_S,
+                       base_rate=BASE_RATE, seed=SEED)
+    alloc_fn = _StaticAllocator() if mode == "static" else AllocatorState()
+    rt = ClusterRuntime(models, regions, configs, lib, alloc_fn, wls,
+                        epoch_s=sc.epoch_s, spot_market=sc.spot_market)
+    t0 = time.time()
+    if mode == "oracle":
+        res = rt.run(sc.requests, sc.availability, sc.truth_demands)
+    elif mode == "static":
+        res = rt.run(sc.requests, sc.availability, _static_demands(sc))
+    else:                                   # the closed loop
+        res = rt.run(sc.requests, sc.availability,
+                     estimator=DemandEstimator(list(models), wls),
+                     controller=ReSolveController(),
+                     planner=TransitionPlanner(lib, regions, rt.init_k))
+    wall = time.time() - t0
+    eps = res.epochs[WARMUP:]
+    return {
+        "cost": sum(e.cost_per_hour for e in eps) / len(eps),
+        "coverage": _coverage(res, sc),
+        "resolves": res.n_resolves(),
+        "preempted": sum(e.n_preempted for e in res.epochs),
+        "reasons": [e.trigger_reason for e in res.epochs],
+        "wall_s": wall,
+    }, sc
+
+
+def run() -> None:
+    models, configs, regions, wls = scenario(extended=False)
+    lib = cached_library("core", models, configs, wls)
+    names = SCENARIOS_FAST if FAST else SCENARIO_NAMES
+    results = []
+    for name in names:
+        out = {}
+        for mode in ("oracle", "est", "static"):
+            out[mode], sc = _one_run(mode, name, models, regions, configs,
+                                     wls, lib)
+        o, e, s = out["oracle"], out["est"], out["static"]
+        row = {
+            "scenario": name,
+            "n_epochs": N_EPOCHS, "epoch_s": EPOCH_S,
+            "base_rate": BASE_RATE, "warmup": WARMUP,
+            "spot_market": sc.spot_market,
+            "cost": {m: out[m]["cost"] for m in out},
+            "coverage": {m: out[m]["coverage"] for m in out},
+            "resolves": {m: out[m]["resolves"] for m in out},
+            "preempted": {m: out[m]["preempted"] for m in out},
+            "est_reasons": e["reasons"],
+            "cost_parity": o["cost"] / max(e["cost"], 1e-9),
+            "goodput_parity": e["coverage"] / max(o["coverage"], 1e-9),
+            "goodput_vs_static": e["coverage"] / max(s["coverage"], 1e-9),
+            "resolve_savings": 1.0 - e["resolves"] / N_EPOCHS,
+        }
+        if name in ("flash_crowd", "spot_preemption") \
+                and row["goodput_vs_static"] <= 1.0:
+            # the ISSUE acceptance criterion is absolute, not relative
+            # to a pinned reference — fail the benchmark (and CI) if
+            # the closed loop stops beating static provisioning
+            raise AssertionError(
+                f"{name}: estimated-demand coverage no longer beats "
+                f"static allocation "
+                f"(vs_static={row['goodput_vs_static']:.3f} <= 1.0)")
+        results.append(row)
+        Row.add(f"control_loop_{name}",
+                (e["wall_s"] + o["wall_s"] + s["wall_s"]) * 1e6 / N_EPOCHS,
+                f"cost_par={row['cost_parity']:.2f}"
+                f";gp_par={row['goodput_parity']:.2f}"
+                f";vs_static={row['goodput_vs_static']:.2f}"
+                f";resolves={e['resolves']}/{N_EPOCHS}")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_control_loop.json"), "w") as f:
+        json.dump({
+            "setup": "core", "n_epochs": N_EPOCHS, "epoch_s": EPOCH_S,
+            "base_rate": BASE_RATE, "warmup": WARMUP, "seed": SEED,
+            # scenarios trimmed by BENCH_FAST — the bench gate skips
+            # exactly these reference metrics (tools/check_bench.py)
+            "fast_trimmed": [n for n in SCENARIO_NAMES if n not in names],
+            "results": results,
+        }, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()
+    Row.flush(os.path.join(ART, "bench_control_loop.csv"))

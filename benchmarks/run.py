@@ -21,10 +21,11 @@ import traceback
 def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.common import ART, Row
-    from benchmarks import (allocator_bench, fig1_heterogeneity, fig2_joint,
-                            fig6_fidelity, fig7_cost, fig9_scarce,
-                            fig11_imbalance, fig12_helix, fig13_sensitivity,
-                            roofline, sim_loop, table1_specs, template_gen)
+    from benchmarks import (allocator_bench, control_loop,
+                            fig1_heterogeneity, fig2_joint, fig6_fidelity,
+                            fig7_cost, fig9_scarce, fig11_imbalance,
+                            fig12_helix, fig13_sensitivity, roofline,
+                            sim_loop, table1_specs, template_gen)
 
     t0 = time.time()
     jobs = [
@@ -32,6 +33,7 @@ def main() -> None:
         ("template_gen", template_gen.run),
         ("sim_loop", sim_loop.run),
         ("allocator", allocator_bench.run),
+        ("control_loop", control_loop.run),
         ("fig1", fig1_heterogeneity.run),
         ("fig2", fig2_joint.run),
         ("fig6", fig6_fidelity.run),

@@ -1,0 +1,23 @@
+"""Adaptive control plane (paper §5): closes the loop between the
+simulator's observables and the online allocator.
+
+* ``estimator`` — online per-(model, phase) demand estimation from the
+  observed arrival / queue / token streams (no oracle demands).
+* ``controller`` — churn-aware re-solve policy: demand-drift and
+  availability-delta triggers with hysteresis + cooldown over a fixed
+  cadence fallback, plus a transition planner that feeds the allocator
+  the cheapest-to-reach incumbent.
+* ``scenarios`` — named, seeded scenario generators (diurnal demand,
+  flash crowd, popularity shift, spot-preemption storms, region
+  outage), each producing (requests, availability, truth-demand).
+"""
+from repro.control.controller import (ControllerConfig, ReSolveController,
+                                      ResolveDecision, TransitionPlanner)
+from repro.control.estimator import DemandEstimator, EstimatorConfig
+from repro.control.scenarios import SCENARIO_NAMES, Scenario, make_scenario
+
+__all__ = [
+    "ControllerConfig", "DemandEstimator", "EstimatorConfig",
+    "ReSolveController", "ResolveDecision", "SCENARIO_NAMES", "Scenario",
+    "TransitionPlanner", "make_scenario",
+]

@@ -1,0 +1,221 @@
+"""Event-driven re-solve policy + churn-aware transition planning
+(paper §5.1; ShuntServe motivates the churn case: spot preemptions make
+reactive re-allocation pay exactly when re-solving is most disruptive).
+
+``ReSolveController`` decides, once per epoch, whether the allocator
+ILP should run at all:
+
+* **demand-drift trigger** — the worst symmetric relative change of any
+  (model, phase) demand against the demand at the last solve;
+* **availability-delta trigger** — the max of the global L1 shift and
+  the worst per-(region, config) relative change of the availability
+  vector against the last solve;
+* both triggers are *hysteretic* (Schmitt-style: fire above the ``_up``
+  threshold, re-arm only after dropping below ``_down``) and share a
+  post-solve **cooldown**, so a noisy-but-stationary signal hovering at
+  the threshold cannot thrash the solver;
+* a fixed **cadence** fallback (``max_interval_epochs``) guarantees the
+  cluster is periodically re-optimized even with no trigger.
+
+``TransitionPlanner`` scores candidate target allocations by *reconcile
+churn* — the amortized INIT_DELAY cost of instances that would be
+started plus a discounted drain cost for instances that would be torn
+down — and feeds the cheapest-to-reach recent target to
+``AllocatorState.set_incumbent`` as the warm start, so the solver's
+incumbent bound reflects the cheapest transition, not just the last
+solution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.allocator import Allocation, Demand
+
+
+@dataclass
+class ControllerConfig:
+    drift_up: float = 0.3           # demand trigger (symmetric rel. change)
+    drift_down: float = 0.1         # demand re-arm level
+    avail_up: float = 0.3           # availability trigger
+    avail_down: float = 0.1         # availability re-arm level
+    cooldown_epochs: int = 1        # min epochs between trigger solves
+    max_interval_epochs: int = 4    # cadence fallback: always re-solve
+    min_nodes: float = 4.0          # ignore per-key wiggle below this
+    emergency_mult: float = 2.0     # a drift this many times the trigger
+    #                                 threshold bypasses the cooldown
+    #                                 (storm onset/recovery, demand cliffs)
+
+
+@dataclass(frozen=True)
+class ResolveDecision:
+    resolve: bool
+    reason: str                     # initial/demand_drift/avail_delta/
+    #                                 preempted/cadence/cooldown/steady
+
+
+class ReSolveController:
+    """Per-epoch re-solve gate.  Call ``decide`` once per epoch; call
+    ``notify_solved`` after every *successful* solve so the reference
+    demand/availability snapshots advance."""
+
+    def __init__(self, cfg: Optional[ControllerConfig] = None):
+        self.cfg = cfg or ControllerConfig()
+        self._ref_demand: Optional[Dict[Tuple[str, str], float]] = None
+        self._ref_avail: Optional[Dict[Tuple[str, str], float]] = None
+        self._since = 0
+        self._armed_demand = True
+        self._armed_avail = True
+
+    # ----------------------------------------------------------- drifts
+    def demand_drift(self, demands: Sequence[Demand]) -> float:
+        """Worst symmetric relative change vs the last-solved demand:
+        |d - ref| / max(d, ref) — bounded in [0, 1], so doubling and
+        halving both read 0.5."""
+        if self._ref_demand is None:
+            return 1.0
+        worst = 0.0
+        for d in demands:
+            ref = self._ref_demand.get((d.model, d.phase), 0.0)
+            base = max(d.tokens_per_s, ref, 1e-9)
+            worst = max(worst, abs(d.tokens_per_s - ref) / base)
+        return worst
+
+    def avail_delta(self, availability: Dict[Tuple[str, str], int]) -> float:
+        if self._ref_avail is None:
+            return 1.0
+        keys = set(availability) | set(self._ref_avail)
+        total_ref = sum(self._ref_avail.values())
+        l1 = 0.0
+        worst_key = 0.0
+        for k in keys:
+            a = float(availability.get(k, 0))
+            r = float(self._ref_avail.get(k, 0))
+            l1 += abs(a - r)
+            if max(a, r) >= self.cfg.min_nodes:
+                worst_key = max(worst_key, abs(a - r) / max(a, r))
+        return max(l1 / max(total_ref, 1.0), worst_key)
+
+    # ----------------------------------------------------------- decide
+    def decide(self, epoch: int, demands: Sequence[Demand],
+               availability: Dict[Tuple[str, str], int],
+               n_preempted: int = 0) -> ResolveDecision:
+        cfg = self.cfg
+        self._since += 1
+        if self._ref_demand is None:
+            return ResolveDecision(True, "initial")
+        if n_preempted > 0:
+            # lost held capacity is an emergency: reactive re-allocation
+            # (ShuntServe's case for spot churn) overrides cooldown and
+            # arming — the reconcile loop cannot replace nodes whose
+            # supply is gone; only a re-solve can move the capacity
+            return ResolveDecision(True, "preempted")
+        dd = self.demand_drift(demands)
+        da = self.avail_delta(availability)
+        # Schmitt re-arming: a trigger that fired stays disarmed until
+        # its signal falls back below the low threshold
+        if dd <= cfg.drift_down:
+            self._armed_demand = True
+        if da <= cfg.avail_down:
+            self._armed_avail = True
+        fire_d = self._armed_demand and dd >= cfg.drift_up
+        fire_a = self._armed_avail and da >= cfg.avail_up
+        if self._since <= cfg.cooldown_epochs:
+            # an extreme excursion (supply storm hitting/recovering, a
+            # demand cliff) is worth a back-to-back solve; ordinary
+            # trigger-level drift waits the cooldown out
+            if fire_a and da >= cfg.emergency_mult * cfg.avail_up:
+                self._armed_avail = False
+                return ResolveDecision(True, "avail_delta")
+            if fire_d and dd >= cfg.emergency_mult * cfg.drift_up:
+                self._armed_demand = False
+                return ResolveDecision(True, "demand_drift")
+            return ResolveDecision(False,
+                                   "cooldown" if (fire_d or fire_a)
+                                   else "steady")
+        if fire_d:
+            self._armed_demand = False
+            return ResolveDecision(True, "demand_drift")
+        if fire_a:
+            self._armed_avail = False
+            return ResolveDecision(True, "avail_delta")
+        if self._since >= cfg.max_interval_epochs:
+            return ResolveDecision(True, "cadence")
+        return ResolveDecision(False, "steady")
+
+    def notify_solved(self, demands: Sequence[Demand],
+                      availability: Dict[Tuple[str, str], int]):
+        self._ref_demand = {(d.model, d.phase): d.tokens_per_s
+                            for d in demands}
+        self._ref_avail = {k: float(v) for k, v in availability.items()}
+        self._since = 0
+        # the drift references just moved: any future excursion is fresh
+        # information, so re-arm both triggers.  The Schmitt disarm
+        # therefore only throttles a trigger whose solve *failed* (the
+        # reference could not advance) — exactly the repeat-fire case
+        # hysteresis is for.
+        self._armed_demand = True
+        self._armed_avail = True
+
+
+class TransitionPlanner:
+    """Scores candidate allocations by reconcile churn and picks the
+    cheapest-to-reach one as the allocator's incumbent warm start.
+
+    Churn from ``current`` to ``target`` counts, per (region, template):
+    ``(target - current)+ * price * init_k`` for instances that must be
+    started (the INIT_DELAY cost the runtime will amortize) plus
+    ``(current - target)+ * price * init_k * drain_weight`` for
+    instances that must drain (lost warm capacity, discounted because a
+    drain finishes its in-flight work).
+    """
+
+    def __init__(self, library, regions: Sequence, init_k: float,
+                 drain_weight: float = 0.5, history: int = 4):
+        self._cfg = library.config_by_name
+        self._region_by_name = {r.name: r for r in regions}
+        self._init_k = init_k
+        self._drain_weight = drain_weight
+        self._max_hist = history
+        self._hist: List[Dict[Tuple[str, Tuple], int]] = []
+        self._tmpl: Dict[Tuple, object] = {}
+
+    def record(self, alloc: Allocation):
+        """Remember a solved target as a future transition candidate."""
+        self._tmpl.update(alloc.templates)
+        counts = dict(alloc.instances)
+        if counts in self._hist:
+            self._hist.remove(counts)
+        self._hist.append(counts)
+        del self._hist[:-self._max_hist]
+
+    def _price(self, region_name: str, tkey: Tuple) -> float:
+        t = self._tmpl.get(tkey)
+        region = self._region_by_name.get(region_name)
+        if t is None or region is None:
+            return 0.0
+        return t.cost(region, self._cfg)
+
+    def churn_cost(self, target: Dict[Tuple[str, Tuple], int],
+                   current: Dict[Tuple[str, Tuple], int]) -> float:
+        cost = 0.0
+        for key in set(target) | set(current):
+            tgt = target.get(key, 0)
+            cur = current.get(key, 0)
+            if tgt == cur:
+                continue
+            price = self._price(key[0], key[1])
+            if tgt > cur:
+                cost += (tgt - cur) * price * self._init_k
+            else:
+                cost += (cur - tgt) * price * self._init_k \
+                    * self._drain_weight
+        return cost
+
+    def choose_incumbent(self, current: Dict[Tuple[str, Tuple], int]
+                         ) -> Optional[Dict[Tuple[str, Tuple], int]]:
+        """Cheapest-to-reach recent target (ties: most recent)."""
+        if not self._hist:
+            return None
+        return min(reversed(self._hist),
+                   key=lambda t: self.churn_cost(t, current))

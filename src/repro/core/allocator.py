@@ -210,6 +210,28 @@ class AllocatorState:
         self._cap_override = max_templates_per_demand
         self._sig = None
         self._prev_x: Optional[np.ndarray] = None
+        self._pending_inc: Optional[Dict[Tuple[str, Tuple], int]] = None
+
+    # -------------------------------------------------------- incumbent
+    def set_incumbent(self, counts: Optional[Dict[Tuple[str, Tuple], int]]):
+        """Seed the *next* solve's warm start from an external target —
+        e.g. the churn-scored cheapest-to-reach allocation picked by
+        ``repro.control.controller.TransitionPlanner`` — instead of the
+        previous solution.  ``counts`` maps (region name, template key)
+        to instance counts; entries whose template is not in the
+        current selection are ignored.  Pass ``None`` to clear."""
+        self._pending_inc = dict(counts) if counts else None
+
+    def _counts_to_x(self, counts: Dict[Tuple[str, Tuple], int]
+                     ) -> np.ndarray:
+        x = np.zeros(self._V, dtype=np.int64)
+        for (rname, tkey), n in counts.items():
+            pb = self._pair_by_mp.get((tkey[0], tkey[1]))
+            r = self._region_idx.get(rname)
+            loc = pb.key_local.get(tkey) if pb is not None else None
+            if r is not None and loc is not None:
+                x[pb.base + r * pb.n + loc] = n
+        return x
 
     # ------------------------------------------------------------- build
     def _signature(self, p: AllocProblem):
@@ -393,13 +415,7 @@ class AllocatorState:
             v_ub[pb.base:pb.base + pb.n * R] = ub.ravel()
         v_ub = np.maximum(v_ub, 0.0)
 
-        cur = np.zeros(self._V)
-        for (rname, tkey), n in p.current.items():
-            pb = self._pair_by_mp.get((tkey[0], tkey[1]))
-            r = self._region_idx.get(rname)
-            loc = pb.key_local.get(tkey) if pb is not None else None
-            if r is not None and loc is not None:
-                cur[pb.base + r * pb.n + loc] = n
+        cur = self._counts_to_x(p.current).astype(float)
 
         # per-model slack penalty: sum over the model's demands of
         # pen(dkey) * tokens (missing pairs default to 1e5, as seed)
@@ -464,12 +480,21 @@ class AllocatorState:
             self._build(p)
         V = self._V
         if V == 0:
+            # an external incumbent has no meaning for an empty model —
+            # drop it rather than let it leak into a later solve
+            self._pending_inc = None
             unmet = {(d.model, d.phase): d.tokens_per_s for d in p.demands}
             return Allocation({}, {}, 0.0, 0.0, unmet, time.time() - t0,
                               0, True, objective=0.0)
         M = self._M
         self._dem_model_idx = [self._slack_of[d.model] - 2 * V
                                for d in p.demands]
+        if self._pending_inc is not None:
+            # externally chosen (churn-scored) warm start overrides the
+            # previous solution; it is clamped/repaired like any other
+            # incumbent before its bound is trusted
+            self._prev_x = self._counts_to_x(self._pending_inc)
+            self._pending_inc = None
         avail, v_ub, cur, tokens, pen_vec = self._epoch_arrays(p)
         avail_rhs = self._avail_rhs(avail)
 

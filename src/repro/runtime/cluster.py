@@ -7,6 +7,17 @@ on scale-down, INIT_DELAY on scale-up), then advance the event simulator
 through the epoch while accounting hourly cost (provisioning + amortized
 initialization).
 
+The loop closes without oracle inputs (repro.control): leave
+``demands_per_epoch`` unset and demands come from a ``DemandEstimator``
+fed by the simulator's windowed observables; install a
+``ReSolveController`` to gate solves behind demand-drift /
+availability-delta triggers, and a ``TransitionPlanner`` to warm-start
+``AllocatorState.set_incumbent`` with the cheapest-to-reach target.
+``spot_market=True`` reinterprets the availability series as *total*
+reclaimable supply: held instances that no longer fit are preempted
+(killed, never auto-replaced), and reconcile scale-up is capped by the
+epoch's availability.
+
 Pass a persistent ``repro.core.allocator.AllocatorState`` as
 ``allocator_fn`` to reuse the assembled ILP structure across epoch
 re-solves (incumbent warm-start included).  A failed or timed-out solve
@@ -54,6 +65,14 @@ class EpochMetrics:
     # the epoch's solve failed/timed out and the previous epoch's
     # allocation (or an incumbent fallback) was kept instead
     solver_failed: bool = False
+    # controller observability: did this epoch run the allocator, and
+    # why (initial/epoch/demand_drift/avail_delta/preempted/cadence/
+    # cooldown/steady/bootstrap) — "epoch" is the fixed every-epoch
+    # cadence used when no ReSolveController is installed
+    resolve_triggered: bool = True
+    trigger_reason: str = "epoch"
+    # spot-market preemptions suffered this epoch (reclaimed instances)
+    n_preempted: int = 0
 
 
 @dataclass
@@ -61,10 +80,17 @@ class RunResult:
     epochs: List[EpochMetrics] = field(default_factory=list)
 
     def avg_cost(self) -> float:
+        if not self.epochs:
+            return 0.0
         return sum(e.cost_per_hour for e in self.epochs) / len(self.epochs)
 
     def avg_goodput(self, model: str) -> float:
+        if not self.epochs:
+            return 0.0
         return sum(e.goodput[model] for e in self.epochs) / len(self.epochs)
+
+    def n_resolves(self) -> int:
+        return sum(1 for e in self.epochs if e.resolve_triggered)
 
 
 AllocatorFn = Callable[[AllocProblem], Allocation]
@@ -77,7 +103,7 @@ class ClusterRuntime:
                  workloads: Dict, epoch_s: float = 360.0,
                  init_amortize_s: float = 3600.0,
                  allocator_time_limit: float = 60.0,
-                 sim_batched: bool = True):
+                 sim_batched: bool = True, spot_market: bool = False):
         self.models = models
         self.regions = regions
         self.configs = configs
@@ -85,6 +111,12 @@ class ClusterRuntime:
         self.allocator_fn = allocator_fn
         self.workloads = workloads
         self.epoch_s = epoch_s
+        # spot-market availability semantics: the per-epoch availability
+        # series is the provider's *total* reclaimable supply (held
+        # nodes included) — held instances exceeding it are preempted
+        # at the epoch edge.  Default (False) keeps the classic "we
+        # keep what we hold" reading where the series is free supply.
+        self.spot_market = spot_market
         self.init_k = INIT_DELAY_S / init_amortize_s
         self.time_limit = allocator_time_limit
         self.sim = Simulator(models, {c.name: c for c in configs}, workloads,
@@ -113,9 +145,20 @@ class ClusterRuntime:
         return {k: len([i for i in v if not i.dead and not i.draining])
                 for k, v in self.running.items()}
 
-    def reconcile(self, alloc: Allocation) -> Tuple[int, int, float]:
+    def reconcile(self, alloc: Allocation,
+                  avail: Optional[Dict[Tuple[str, str], int]] = None
+                  ) -> Tuple[int, int, float]:
         """Scale instances toward the target allocation. Returns
-        (n_new, n_drained, init_cost_per_hour_amortized)."""
+        (n_new, n_drained, init_cost_per_hour_amortized).
+
+        When ``avail`` is given (the same (region, config) -> nodes map
+        the allocator solved against), scale-up is capped by it: an
+        instance whose node usage no longer fits is *not* started (the
+        capacity it wanted was lost — e.g. preempted spot supply — and
+        cannot be conjured back by reconciliation).  ILP targets always
+        fit their own availability, so the cap only binds for targets
+        computed against stale supply (static baselines, kept
+        allocations on skipped/failed solves)."""
         n_new = n_drained = 0
         init_cost = 0.0
         cfg = self.library.config_by_name
@@ -130,6 +173,7 @@ class ClusterRuntime:
                     self.sim.drain_instance(inst)
                     n_drained += 1
         # scale up
+        held = self._held_nodes() if avail is not None else None
         for (region_name, tkey), tgt in targets.items():
             key = (region_name, tkey)
             live = [i for i in self.running.get(key, [])
@@ -137,11 +181,56 @@ class ClusterRuntime:
             template = alloc.templates[tkey]
             region = self.region_by_name[region_name]
             for _ in range(tgt - len(live)):
+                if held is not None:
+                    if any(held.get((region_name, c), 0) + n
+                           > avail.get((region_name, c), 0)
+                           for c, n in template.counts):
+                        break               # this template no longer fits
+                    for c, n in template.counts:
+                        held[(region_name, c)] = \
+                            held.get((region_name, c), 0) + n
                 inst = self.sim.add_instance(region_name, template)
                 self.running.setdefault(key, []).append(inst)
                 n_new += 1
                 init_cost += template.cost(region, cfg) * self.init_k
         return n_new, n_drained, init_cost
+
+    def _reclaim(self, avail: Dict[Tuple[str, str], int]) -> int:
+        """Spot-market preemption: kill held instances until every
+        (region, config) holding fits inside the epoch's *total* supply
+        (``spot_market`` semantics).  Victims are the least-loaded
+        instances using the over-held (region, config); there is no
+        automatic replacement — recovering capacity is the allocator's
+        job at the next (trigger-driven) re-solve."""
+        killed = 0
+        while True:
+            held = self._held_nodes()
+            over = [k for k, h in held.items()
+                    if h > avail.get(k, 0)]
+            if not over:
+                return killed
+            region, cname = over[0]
+            cands = [i for (rname, _tk), insts in self.running.items()
+                     if rname == region
+                     for i in insts
+                     if not i.dead and not i.draining
+                     and any(c == cname for c, _n in i.template.counts)]
+            if not cands:       # defensive hang-guard: unreachable while
+                return killed   # _held_nodes excludes draining/dead
+            victim = min(cands,
+                         key=lambda i: len(i.queue) + len(i.resident))
+            self.sim.kill_instance(victim)
+            killed += 1
+
+    def _shortfall(self, alloc: Allocation,
+                   demands: Sequence[Demand]) -> Dict:
+        """Unmet tokens/s of a kept allocation against fresh demands."""
+        unmet = {}
+        for d in demands:
+            short = d.tokens_per_s - alloc.served(d.model, d.phase)
+            if short > 1e-6:
+                unmet[(d.model, d.phase)] = short
+        return unmet
 
     def fail_instance(self, rng: random.Random) -> Optional[SimInstance]:
         """Kill one random live instance (node-failure injection) and
@@ -181,43 +270,107 @@ class ClusterRuntime:
     # ---------------------------------------------------------------- run
     def run(self, requests: List[Request],
             availability_per_epoch: List[Dict[Tuple[str, str], int]],
-            demands_per_epoch: List[List[Demand]],
-            fail_rate_per_epoch: float = 0.0, seed: int = 0) -> RunResult:
+            demands_per_epoch: Optional[List[List[Demand]]] = None,
+            fail_rate_per_epoch: float = 0.0, seed: int = 0,
+            estimator=None, controller=None, planner=None) -> RunResult:
+        """Run the epoch loop.
+
+        Demand source: pass oracle ``demands_per_epoch`` (the classic
+        path), or leave it ``None`` to close the loop — demands then
+        come from a ``repro.control.estimator.DemandEstimator`` (the
+        given one, or a default-configured one) fed by the simulator's
+        observables after every epoch.
+
+        Re-solve policy: with a ``repro.control.controller``
+        ``ReSolveController`` the allocator only runs on demand-drift /
+        availability-delta triggers (or the cadence fallback); skipped
+        epochs keep the standing allocation.  A ``TransitionPlanner``
+        additionally feeds the allocator the cheapest-to-reach recent
+        target as its incumbent warm start (requires an allocator with
+        ``set_incumbent``, e.g. ``AllocatorState``).
+        """
         rng = random.Random(seed)
+        if demands_per_epoch is not None and estimator is not None:
+            raise ValueError("pass oracle demands_per_epoch OR an "
+                             "estimator, not both")
+        if demands_per_epoch is None and estimator is None:
+            from repro.control.estimator import DemandEstimator
+            estimator = DemandEstimator(list(self.models), self.workloads)
         for r in requests:
             self.sim.submit(r)
         result = RunResult()
         n_epochs = len(availability_per_epoch)
+        can_warm = planner is not None \
+            and hasattr(self.allocator_fn, "set_incumbent")
         for e in range(n_epochs):
             t0 = e * self.epoch_s
             t1 = t0 + self.epoch_s
-            held = self._held_nodes()
-            avail = dict(availability_per_epoch[e])
-            for k, n in held.items():
-                avail[k] = avail.get(k, 0) + n      # we keep what we hold
-            prob = AllocProblem(
-                self.regions, self.configs, avail, demands_per_epoch[e],
-                self.library, current=self._current_counts(),
-                init_penalty_k=self.init_k, time_limit=self.time_limit)
-            alloc = self.allocator_fn(prob)
-            solver_failed = not alloc.ok or getattr(alloc, "fallback", False)
-            solve_s, unmet = alloc.solve_seconds, alloc.unmet
-            if not alloc.ok:
-                # failed/timed-out solve: an empty allocation is NOT a
-                # scale-to-zero target — keep the previous epoch's
-                # allocation (if any) instead of draining the cluster,
-                # reporting its shortfall against *this* epoch's demands
-                if self._last_alloc is not None:
-                    alloc = self._last_alloc
-                    unmet = {}
-                    for d in demands_per_epoch[e]:
-                        short = d.tokens_per_s \
-                            - alloc.served(d.model, d.phase)
-                        if short > 1e-6:
-                            unmet[(d.model, d.phase)] = short
+            if estimator is not None:
+                demands = estimator.estimate(horizon_s=self.epoch_s)
             else:
-                self._last_alloc = alloc
-            n_new, n_drained, init_cost = self.reconcile(alloc)
+                demands = demands_per_epoch[e]
+            raw = dict(availability_per_epoch[e])
+            n_preempted = 0
+            if self.spot_market:
+                # the series is total supply: shed preempted holdings,
+                # then solve against the supply itself
+                n_preempted = self._reclaim(raw)
+                avail = raw
+            else:
+                avail = dict(raw)       # the controller drifts on the
+                # raw market series; only the solver sees held nodes
+                for k, n in self._held_nodes().items():
+                    avail[k] = avail.get(k, 0) + n  # we keep what we hold
+            if controller is not None:
+                decision = controller.decide(e, demands, raw,
+                                             n_preempted=n_preempted)
+                resolve, reason = decision.resolve, decision.reason
+            else:
+                resolve, reason = True, "epoch"
+            if not resolve and self._last_alloc is None:
+                resolve, reason = True, "bootstrap"
+            solver_failed = False
+            if resolve:
+                prob = AllocProblem(
+                    self.regions, self.configs, avail, demands,
+                    self.library, current=self._current_counts(),
+                    init_penalty_k=self.init_k, time_limit=self.time_limit)
+                if can_warm:
+                    inc = planner.choose_incumbent(self._current_counts())
+                    if inc is not None:
+                        self.allocator_fn.set_incumbent(inc)
+                alloc = self.allocator_fn(prob)
+                solver_failed = not alloc.ok \
+                    or getattr(alloc, "fallback", False)
+                solve_s, unmet = alloc.solve_seconds, alloc.unmet
+                if not alloc.ok:
+                    # failed/timed-out solve: an empty allocation is NOT
+                    # a scale-to-zero target — keep the previous epoch's
+                    # allocation (if any) instead of draining the
+                    # cluster, reporting its shortfall against *this*
+                    # epoch's demands
+                    if self._last_alloc is not None:
+                        alloc = self._last_alloc
+                        unmet = self._shortfall(alloc, demands)
+                else:
+                    self._last_alloc = alloc
+                    # a fallback (failed-HiGHS) result is a usable
+                    # target but NOT a solve: the controller's drift
+                    # references must not advance (the trigger should
+                    # keep firing until a real re-solve lands), and the
+                    # planner must not score it as a reached optimum
+                    if not solver_failed:
+                        if controller is not None:
+                            controller.notify_solved(demands, raw)
+                        if planner is not None:
+                            planner.record(alloc)
+            else:
+                # trigger-gated skip: keep the standing allocation as
+                # the target (reconcile still replaces lost capacity)
+                alloc = self._last_alloc
+                solve_s = 0.0
+                unmet = self._shortfall(alloc, demands)
+            n_new, n_drained, init_cost = self.reconcile(alloc, avail)
             self._epoch_new = 0
             self._epoch_init_cost = 0.0
             if fail_rate_per_epoch > 0 and rng.random() < fail_rate_per_epoch:
@@ -226,6 +379,8 @@ class ClusterRuntime:
                 self.sim.ev.push(t0 + rng.random() * self.epoch_s,
                                  self.fail_instance, rng)
             self.sim.run_until(t1)
+            if estimator is not None:
+                estimator.observe(self.sim, t0, t1)
             n_new += self._epoch_new
             init_cost += self._epoch_init_cost
             # provisioning cost of the live cluster
@@ -245,5 +400,7 @@ class ClusterRuntime:
                                  if not i.dead]),
                 n_new=n_new, n_drained=n_drained,
                 solve_seconds=solve_s, unmet=unmet,
-                solver_failed=solver_failed))
+                solver_failed=solver_failed,
+                resolve_triggered=resolve, trigger_reason=reason,
+                n_preempted=n_preempted))
         return result

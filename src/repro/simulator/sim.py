@@ -153,6 +153,70 @@ class TokenRuns:
         return total
 
 
+class _ObsLog:
+    """Append-only (time, prompt tokens, output tokens) event log with
+    O(log n) window queries — the windowed observable feed for the
+    control plane's demand estimator (repro.control.estimator).  Events
+    may be appended out of time order (requests are submitted up
+    front); the query-side arrays sort lazily and cache until the next
+    append."""
+
+    __slots__ = ("_t", "_p", "_o", "_np", "n_total", "prompt_total",
+                 "output_total")
+
+    def __init__(self):
+        self._t: List[float] = []
+        self._p: List[int] = []
+        self._o: List[int] = []
+        self._np = None
+        self.n_total = 0
+        self.prompt_total = 0.0
+        self.output_total = 0.0
+
+    def add(self, t: float, prompt: int, output: int):
+        self._t.append(t)
+        self._p.append(prompt)
+        self._o.append(output)
+        self.n_total += 1
+        self.prompt_total += prompt
+        self.output_total += output
+        self._np = None
+
+    def _arrays(self):
+        if self._np is None:
+            t = np.array(self._t)
+            order = np.argsort(t, kind="stable")
+            t = t[order]
+            p = np.cumsum(np.array(self._p, dtype=float)[order])
+            o = np.cumsum(np.array(self._o, dtype=float)[order])
+            self._np = (t, p, o)
+        return self._np
+
+    def window(self, t0: float, t1: float) -> Tuple[int, float, float]:
+        """(events, prompt tokens, output tokens) with time in [t0, t1)."""
+        if not self._t:
+            return 0, 0.0, 0.0
+        t, cp, co = self._arrays()
+        i0 = int(np.searchsorted(t, t0, side="left"))
+        i1 = int(np.searchsorted(t, t1, side="left"))
+        if i1 <= i0:
+            return 0, 0.0, 0.0
+        p0 = cp[i0 - 1] if i0 else 0.0
+        o0 = co[i0 - 1] if i0 else 0.0
+        return i1 - i0, float(cp[i1 - 1] - p0), float(co[i1 - 1] - o0)
+
+
+class ModelObs:
+    """Per-model control-plane observables: the request arrival stream
+    (prompt lengths are visible at arrival; output lengths are the
+    eventual commitment the estimator learns from finished requests)."""
+
+    __slots__ = ("arrival",)
+
+    def __init__(self):
+        self.arrival = _ObsLog()
+
+
 class _Span:
     """An in-flight batched stretch of decode iterations.
 
@@ -255,6 +319,7 @@ class Simulator:
         self.instances: Dict[int, SimInstance] = {}
         self._by_pool: Dict[Tuple[str, str], List[SimInstance]] = {}
         self.tokens: Dict[str, TokenRuns] = {m: TokenRuns() for m in models}
+        self.obs: Dict[str, ModelObs] = {m: ModelObs() for m in models}
         self.prefill_lat: Dict[str, List[float]] = {m: [] for m in models}
         self.finished: List[Request] = []
         self.dropped: int = 0
@@ -431,6 +496,9 @@ class Simulator:
 
     # ------------------------------------------------------------ arrival
     def submit(self, req: Request):
+        ob = self.obs.get(req.model)
+        if ob is not None:
+            ob.arrival.add(req.arrival, req.prompt_len, req.output_len)
         self.ev.push(req.arrival, self._on_arrival, req)
 
     def _on_arrival(self, req: Request):
@@ -830,6 +898,19 @@ class Simulator:
             self.now = max(self.now, t)
             fn(*args)
         self.now = t_end
+
+    def pool_backlog(self, model: str, phase: str) -> Tuple[int, int]:
+        """Queue snapshot over a pool's live instances: (queued requests,
+        queued prompt tokens).  Resident decode requests are in-flight
+        work, not backlog, and are excluded."""
+        n = ptok = 0
+        for i in self._by_pool.get((model, phase), ()):
+            if i.dead or i.draining:
+                continue
+            n += len(i.queue)
+            for r in i.queue:
+                ptok += r.prompt_len
+        return n, ptok
 
     # ------------------------------------------------------------ metrics
     def goodput(self, model: str, t0: float, t1: float) -> float:

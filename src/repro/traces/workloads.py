@@ -63,11 +63,21 @@ def gen_requests(model: str, trace: str, rate: float, duration: float,
                  seed: int, rid0: int = 0) -> List[Request]:
     """Poisson/gamma arrival process at ``rate`` req/s for ``duration`` s."""
     t = TRACES[trace]
+    if rate <= 0.0 or duration <= 0.0:
+        return []
     rng = np.random.default_rng(seed)
     n = int(rate * duration * 1.5) + 16
     shape = 1.0 / (t.burstiness ** 2)
-    gaps = rng.gamma(shape, 1.0 / (rate * shape), n)
+    scale = 1.0 / (rate * shape)
+    gaps = rng.gamma(shape, scale, n)
     arr = np.cumsum(gaps)
+    # bursty traces (CV > 1) can draw a gap sample whose sum falls short
+    # of ``duration`` — the old fixed 1.5x buffer then silently ended
+    # the trace early.  Extend the renewal process until it passes the
+    # horizon, so the filter below always trims, never truncates.
+    while arr[-1] < duration:
+        more = rng.gamma(shape, scale, max(n // 2, 16))
+        arr = np.concatenate([arr, arr[-1] + np.cumsum(more)])
     arr = arr[arr < duration]
     prompts = np.maximum(_lognormal(rng, t.prompt_mean, t.prompt_cv,
                                     len(arr)).astype(int), 8)
@@ -83,23 +93,51 @@ def gen_availability(regions: Sequence[Region], configs: Sequence[NodeConfig],
                      ) -> List[Dict[Tuple[str, str], int]]:
     """Alibaba-style availability walk: per (region, config), a bounded
     random walk around ``base[config]`` x regional factor, optionally
-    scaled down per device type (``scarcity``, e.g. H100 constrained)."""
+    scaled down per device type (``scarcity``, e.g. H100 constrained).
+
+    The walk is bounded relative to the per-(region, config) *base*
+    level: multiplicative steps are clipped to ``[0, 4 x base]``.  (The
+    old code recomputed the ceiling from the current level each epoch,
+    so the "bound" drifted with the walk and long horizons could grow
+    without limit.)
+    """
     rng = np.random.default_rng(seed)
     scarcity = scarcity or {}
     out = []
     level = {}
+    bound = {}
     for r in regions:
         for c in configs:
             b = base.get(c.name, 0) * scarcity.get(c.device.name, 1.0)
             level[(r.name, c.name)] = b * rng.uniform(0.85, 1.15)
+            bound[(r.name, c.name)] = 4.0 * max(b, 1.0)
     for _ in range(n_epochs):
         epoch = {}
         for k in level:
             level[k] = np.clip(level[k] * rng.uniform(0.88, 1.12),
-                               0.0, 4.0 * max(level[k], 1))
+                               0.0, bound[k])
             epoch[k] = int(round(level[k]))
         out.append(epoch)
     return out
+
+
+def gen_requests_schedule(model: str, trace: str, rates: Sequence[float],
+                          epoch_s: float, seed: int, rid0: int = 0,
+                          rid_stride: int = 100_000) -> List[Request]:
+    """Piecewise-constant rate schedule: one ``gen_requests`` stretch per
+    epoch (rate ``rates[e]`` over ``[e*epoch_s, (e+1)*epoch_s)``), with
+    per-epoch seeds so a scenario's epochs are individually
+    reproducible.  Used by the control-plane scenario generators."""
+    reqs: List[Request] = []
+    for e, r in enumerate(rates):
+        if r <= 1e-12:
+            continue
+        part = gen_requests(model, trace, float(r), epoch_s,
+                            seed=seed * 1009 + e, rid0=rid0 + e * rid_stride)
+        for q in part:
+            q.arrival += e * epoch_s
+        reqs += part
+    return reqs
 
 
 def default_base_availability(configs: Sequence[NodeConfig],

@@ -1,0 +1,380 @@
+"""Control plane: demand estimator, re-solve controller, transition
+planner, scenario generators, and the estimator-driven epoch loop.
+
+Scenario/runtime tests reuse the session-scoped ``phi4_runtime_library``
+fixture (tests/conftest.py) — the same small L40S/L4 library the epoch
+runtime tests run on."""
+import numpy as np
+import pytest
+
+from repro.control import (ControllerConfig, DemandEstimator,
+                           EstimatorConfig, ReSolveController,
+                           SCENARIO_NAMES, TransitionPlanner, make_scenario)
+from repro.core.allocator import AllocatorState, Demand, allocate
+from repro.core.hardware import CORE_REGIONS, make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.runtime.cluster import ClusterRuntime, RunResult
+from repro.traces.workloads import workload_stats
+
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+MODEL = PAPER_MODELS["phi4-14b"]
+WLS = {MODEL.name: workload_stats(MODEL.trace)}
+M = MODEL.name
+
+
+# ---------------------------------------------------------- estimator
+def _fed_estimator(rate, n_windows=40, dt=60.0, noise=None, seed=0,
+                   cfg=None):
+    est = DemandEstimator([M], WLS, cfg)
+    rng = np.random.default_rng(seed)
+    wl = WLS[M]
+    for _ in range(n_windows):
+        r = rate if noise is None else rate * (1 + noise * rng.uniform(-1, 1))
+        n = max(int(round(r * dt)), 0)
+        est.ingest_window(M, dt, n, n * wl.avg_prompt)
+    return est
+
+
+def test_estimator_converges_on_stationary_rate():
+    rate = 4.0
+    est = _fed_estimator(rate)
+    assert abs(est.rate(M) - rate) / rate < 0.1
+    dem = {(d.model, d.phase): d.tokens_per_s for d in est.estimate()}
+    wl = WLS[M]
+    assert abs(dem[(M, "prefill")] - rate * wl.avg_prompt) \
+        / (rate * wl.avg_prompt) < 0.15
+    assert abs(dem[(M, "decode")] - rate * wl.avg_output) \
+        / (rate * wl.avg_output) < 0.15
+
+
+def test_estimator_prior_before_any_observation():
+    est = DemandEstimator([M], WLS)
+    assert est.rate(M) == pytest.approx(est.cfg.prior_rate)
+    dem = est.estimate()
+    assert {(d.model, d.phase) for d in dem} \
+        == {(M, "prefill"), (M, "decode")}
+    assert all(d.tokens_per_s > 0 for d in dem)
+
+
+def test_estimator_demand_order_is_stable():
+    est = _fed_estimator(2.0)
+    first = [(d.model, d.phase) for d in est.estimate()]
+    est.ingest_window(M, 60.0, 500, 500 * 100.0)
+    assert [(d.model, d.phase) for d in est.estimate()] == first
+
+
+def test_headroom_quantile_is_monotone():
+    est = _fed_estimator(3.0, noise=0.6, seed=7)
+    qs = [0.5, 0.6, 0.7, 0.8, 0.9, 0.99]
+    rates = [est.rate(M, q=q) for q in qs]
+    assert all(b >= a - 1e-12 for a, b in zip(rates, rates[1:]))
+    # and headroom actually adds over the noisy mean at high quantiles
+    assert est.rate(M, q=0.99) > 3.0
+
+
+def test_estimator_tracks_ramp_with_trend():
+    est = DemandEstimator([M], WLS)
+    wl = WLS[M]
+    for i in range(20):
+        r = 1.0 + 0.25 * i                 # ramping arrivals
+        n = int(round(r * 60.0))
+        est.ingest_window(M, 60.0, n, n * wl.avg_prompt)
+    # extrapolating one epoch ahead exceeds the trailing EWMA level
+    assert est.rate(M, horizon_s=240.0) > est.rate(M, horizon_s=0.0)
+
+
+# --------------------------------------------------------- controller
+def _demands(tps):
+    return [Demand(M, "prefill", tps), Demand(M, "decode", tps * 0.1)]
+
+
+AVAIL = {("r0", "1xL40S"): 20, ("r0", "1xL4"): 20}
+
+
+def test_controller_resolves_initially_then_cadence():
+    c = ReSolveController(ControllerConfig(max_interval_epochs=4))
+    d0 = c.decide(0, _demands(100.0), AVAIL)
+    assert d0.resolve and d0.reason == "initial"
+    c.notify_solved(_demands(100.0), AVAIL)
+    reasons = []
+    for e in range(1, 9):
+        dec = c.decide(e, _demands(100.0), AVAIL)
+        reasons.append(dec.reason)
+        if dec.resolve:
+            c.notify_solved(_demands(100.0), AVAIL)
+    # perfectly steady: only the cadence fallback fires, every 4 epochs
+    assert reasons.count("cadence") == 2
+    assert all(r in ("steady", "cadence") for r in reasons)
+
+
+def test_controller_hysteresis_prevents_thrash_on_noise():
+    """Noisy-but-stationary demand (+/-20%, below the 30% trigger) must
+    not re-solve more often than the cadence fallback."""
+    cfg = ControllerConfig(max_interval_epochs=4)
+    c = ReSolveController(cfg)
+    rng = np.random.default_rng(3)
+    n_resolves = 0
+    ref = 100.0
+    c.decide(0, _demands(ref), AVAIL)
+    c.notify_solved(_demands(ref), AVAIL)
+    n_epochs = 16
+    for e in range(1, n_epochs):
+        tps = ref * (1 + 0.2 * rng.uniform(-1, 1))
+        dec = c.decide(e, _demands(tps), AVAIL)
+        if dec.resolve:
+            assert dec.reason == "cadence"
+            n_resolves += 1
+            c.notify_solved(_demands(tps), AVAIL)
+    assert n_resolves <= n_epochs // cfg.max_interval_epochs
+
+
+def test_controller_fires_on_demand_drift():
+    c = ReSolveController()
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)
+    c.decide(1, _demands(105.0), AVAIL)         # cooldown epoch, quiet
+    dec = c.decide(2, _demands(250.0), AVAIL)   # 2.5x surge
+    assert dec.resolve and dec.reason == "demand_drift"
+
+
+def test_controller_cooldown_defers_moderate_drift():
+    c = ReSolveController(ControllerConfig(cooldown_epochs=2))
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)
+    # +50% drift (symmetric: 50/150 = 0.33): above the 0.3 trigger,
+    # below the 0.6 emergency level
+    dec = c.decide(1, _demands(150.0), AVAIL)
+    assert not dec.resolve and dec.reason == "cooldown"
+    dec = c.decide(2, _demands(150.0), AVAIL)
+    assert not dec.resolve and dec.reason == "cooldown"
+    dec = c.decide(3, _demands(150.0), AVAIL)
+    assert dec.resolve and dec.reason == "demand_drift"
+
+
+def test_controller_emergency_bypasses_cooldown():
+    c = ReSolveController()
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)
+    # a preemption always overrides the gate
+    dec = c.decide(1, _demands(100.0), AVAIL, n_preempted=2)
+    assert dec.resolve and dec.reason == "preempted"
+    c.notify_solved(_demands(100.0), AVAIL)
+    # availability collapse (>= 2x the trigger level) fires mid-cooldown
+    gone = {k: 0 for k in AVAIL}
+    dec = c.decide(2, _demands(100.0), gone)
+    assert dec.resolve and dec.reason == "avail_delta"
+
+
+def test_controller_fires_on_availability_delta():
+    c = ReSolveController()
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)
+    c.decide(1, _demands(100.0), AVAIL)
+    half = {k: v // 2 for k, v in AVAIL.items()}
+    dec = c.decide(2, _demands(100.0), half)
+    assert dec.resolve and dec.reason == "avail_delta"
+
+
+# ---------------------------------------------------------- planner
+def test_transition_planner_prefers_cheapest_transition(
+        phi4_runtime_library):
+    lib = phi4_runtime_library
+    state = AllocatorState()
+    wl = WLS[M]
+    demands = [Demand(M, "prefill", 3.0 * wl.avg_prompt),
+               Demand(M, "decode", 3.0 * wl.avg_output)]
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    from repro.core.allocator import AllocProblem
+    alloc = state(AllocProblem(CORE_REGIONS, CONFIGS, avail, demands, lib))
+    assert alloc.ok and alloc.instances
+    planner = TransitionPlanner(lib, CORE_REGIONS, init_k=0.025)
+    planner.record(alloc)
+    cur = dict(alloc.instances)
+    assert planner.churn_cost(cur, cur) == 0.0
+    # reaching an empty cluster from the allocation costs drains only;
+    # reaching the allocation from empty costs full init — more churn
+    assert 0.0 < planner.churn_cost({}, cur) \
+        < planner.churn_cost(cur, {})
+    assert planner.choose_incumbent(cur) == cur
+
+
+def test_allocator_accepts_external_incumbent(phi4_runtime_library):
+    lib = phi4_runtime_library
+    wl = WLS[M]
+    demands = [Demand(M, "prefill", 2.0 * wl.avg_prompt),
+               Demand(M, "decode", 2.0 * wl.avg_output)]
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    from repro.core.allocator import AllocProblem
+    prob = AllocProblem(CORE_REGIONS, CONFIGS, avail, demands, lib)
+    state = AllocatorState()
+    base = state(prob)
+    assert base.ok
+    state.set_incumbent(base.instances)
+    warm = state(prob)
+    assert warm.ok
+    assert state._pending_inc is None           # consumed by the solve
+    # the warm-started solve reaches the same optimum
+    assert warm.objective == pytest.approx(base.objective, rel=1e-4)
+
+
+# ------------------------------------------------- scenarios + runtime
+def test_scenarios_are_deterministic_and_consistent():
+    models = {M: MODEL}
+    for name in SCENARIO_NAMES:
+        a = make_scenario(name, models, CORE_REGIONS, CONFIGS, WLS,
+                          n_epochs=5, epoch_s=120.0, seed=4)
+        b = make_scenario(name, models, CORE_REGIONS, CONFIGS, WLS,
+                          n_epochs=5, epoch_s=120.0, seed=4)
+        assert [(r.arrival, r.prompt_len) for r in a.requests] \
+            == [(r.arrival, r.prompt_len) for r in b.requests]
+        assert a.availability == b.availability
+        assert len(a.availability) == 5 and len(a.truth_demands) == 5
+        wl = WLS[M]
+        for e, row in enumerate(a.truth_demands):
+            dec = next(d for d in row if d.phase == "decode")
+            assert dec.tokens_per_s \
+                == pytest.approx(a.rates[M][e] * wl.avg_output)
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError):
+        make_scenario("nope", {M: MODEL}, CORE_REGIONS, CONFIGS, WLS)
+
+
+def _run_scenario(lib, name, *, oracle=False, n_epochs=5, base_rate=1.2,
+                  seed=2):
+    models = {M: MODEL}
+    sc = make_scenario(name, models, CORE_REGIONS, CONFIGS, WLS,
+                       n_epochs=n_epochs, epoch_s=180.0,
+                       base_rate=base_rate, seed=seed)
+    rt = ClusterRuntime(models, CORE_REGIONS, CONFIGS, lib,
+                        AllocatorState(), WLS, epoch_s=sc.epoch_s,
+                        spot_market=sc.spot_market)
+    if oracle:
+        res = rt.run(sc.requests, sc.availability, sc.truth_demands)
+    else:
+        res = rt.run(
+            sc.requests, sc.availability,
+            estimator=DemandEstimator([M], WLS),
+            controller=ReSolveController(),
+            planner=TransitionPlanner(lib, CORE_REGIONS, rt.init_k))
+    return rt, res, sc
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_estimator_driven_runtime_on_all_scenarios(phi4_runtime_library,
+                                                   name):
+    """The closed loop runs end-to-end on every named scenario with NO
+    oracle demands: the cluster bootstraps from the estimator prior,
+    serves traffic, and the controller's decisions are observable."""
+    rt, res, sc = _run_scenario(phi4_runtime_library, name)
+    assert len(res.epochs) == sc.n_epochs
+    assert res.epochs[0].trigger_reason == "initial"
+    assert all(e.resolve_triggered == (e.trigger_reason not in
+                                       ("steady", "cooldown"))
+               for e in res.epochs)
+    # the loop converges onto the workload: post-warmup epochs serve
+    assert all(e.goodput[M] > 0 for e in res.epochs[2:])
+    if not sc.spot_market:
+        # demand-side scenarios: trigger-gating skips solves somewhere
+        # (supply-side storms can legitimately fire every epoch)
+        assert res.n_resolves() < sc.n_epochs
+        assert rt.sim.dropped == 0
+
+
+def test_spot_preemption_reclaims_and_recovers(phi4_runtime_library):
+    rt, res, sc = _run_scenario(phi4_runtime_library, "spot_preemption",
+                                n_epochs=8)
+    assert sum(e.n_preempted for e in res.epochs) > 0
+    # a preemption epoch is followed by a re-solve (never silently
+    # absorbed by cadence-skipping)
+    for e in res.epochs:
+        if e.n_preempted:
+            assert e.resolve_triggered
+    assert res.epochs[-1].goodput[M] > 0
+
+
+def test_flash_crowd_estimated_tracks_oracle(phi4_runtime_library):
+    """Estimator-driven goodput stays within tolerance of the
+    oracle-demand run on the flash-crowd scenario (the benchmark gates
+    the tighter 15% envelope at core scale)."""
+    _, res_o, sc = _run_scenario(phi4_runtime_library, "flash_crowd",
+                                 oracle=True, n_epochs=8)
+    _, res_e, _ = _run_scenario(phi4_runtime_library, "flash_crowd",
+                                n_epochs=8)
+    def cov(res):
+        tot = c = 0.0
+        for e in res.epochs[2:]:
+            dem = sum(d.tokens_per_s for d in sc.truth_demands[e.epoch]
+                      if d.phase == "decode")
+            c += min(e.goodput[M], dem)
+            tot += dem
+        return c / tot
+    assert cov(res_e) >= 0.75 * cov(res_o)
+
+
+def test_fallback_solve_does_not_advance_controller(phi4_runtime_library):
+    """A fallback (failed-HiGHS, incumbent-returned) solve is a usable
+    target but NOT a solve: the controller's drift references must stay
+    put so the trigger keeps firing until a real re-solve lands."""
+    from repro.traces.workloads import gen_requests
+    lib = phi4_runtime_library
+    state = AllocatorState()
+    calls = {"n": 0}
+
+    def flaky(prob):
+        calls["n"] += 1
+        alloc = state(prob)
+        if calls["n"] >= 2:
+            alloc.fallback = True           # simulate a HiGHS failure
+        return alloc
+
+    notes = []
+
+    class SpyController(ReSolveController):
+        def notify_solved(self, demands, availability):
+            notes.append(True)
+            super().notify_solved(demands, availability)
+
+    rt = ClusterRuntime({M: MODEL}, CORE_REGIONS, CONFIGS, lib, flaky,
+                        WLS, epoch_s=180.0)
+    wl = WLS[M]
+    n = 3
+    reqs = gen_requests(M, MODEL.trace, 1.5, n * 180.0, seed=0)
+    avail = [{(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+             for _ in range(n)]
+    ctrl = SpyController(ControllerConfig(max_interval_epochs=1,
+                                          cooldown_epochs=0))
+    res = rt.run(reqs, avail, estimator=DemandEstimator([M], WLS),
+                 controller=ctrl)
+    # every epoch re-solved (cadence 1), but only the first (healthy)
+    # solve advanced the controller's references
+    assert all(e.resolve_triggered for e in res.epochs)
+    assert [e.solver_failed for e in res.epochs] == [False, True, True]
+    assert len(notes) == 1
+
+
+def test_runresult_guards_empty_and_counts_resolves():
+    empty = RunResult()
+    assert empty.avg_cost() == 0.0
+    assert empty.avg_goodput(M) == 0.0
+    assert empty.n_resolves() == 0
+
+
+def test_classic_oracle_path_reports_every_epoch_resolved(
+        phi4_runtime_library):
+    """The legacy oracle-demand path is unchanged: every epoch solves,
+    tagged with the fixed-cadence reason."""
+    from repro.traces.workloads import gen_requests
+    lib = phi4_runtime_library
+    rt = ClusterRuntime({M: MODEL}, CORE_REGIONS, CONFIGS, lib, allocate,
+                        WLS, epoch_s=180.0)
+    wl = WLS[M]
+    reqs = gen_requests(M, MODEL.trace, 1.5, 2 * 180.0, seed=0)
+    avail = [{(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+             for _ in range(2)]
+    demands = [[Demand(M, "prefill", 1.5 * wl.avg_prompt),
+                Demand(M, "decode", 1.5 * wl.avg_output)]] * 2
+    res = rt.run(reqs, avail, demands)
+    assert all(e.resolve_triggered and e.trigger_reason == "epoch"
+               for e in res.epochs)

@@ -9,7 +9,7 @@ except ImportError:                      # no network in this container
 from repro.core.hardware import CORE_CONFIGS, CORE_REGIONS
 from repro.traces.workloads import (TRACES, default_base_availability,
                                     gen_availability, gen_requests,
-                                    workload_stats)
+                                    gen_requests_schedule, workload_stats)
 
 
 def test_determinism():
@@ -55,6 +55,53 @@ def test_availability_walk_bounds(seed, n_epochs):
         for (r, c), v in epoch.items():
             assert v >= 0
             assert isinstance(v, int)
+
+
+def test_bursty_trace_covers_full_duration():
+    """Regression (silent truncation): with the old fixed 1.5x gap
+    buffer, seeds 343/737 at (rate=0.5, duration=60, burstgpt CV 2.2)
+    drew gap samples summing to only ~41s/~40s — the trace ended early
+    with no error.  The renewal process must now be extended until it
+    passes the horizon, so arrivals cover the whole duration."""
+    for seed, old_end in ((343, 41.4), (737, 40.0)):
+        reqs = gen_requests("m", "burstgpt", 0.5, 60.0, seed=seed)
+        assert max(r.arrival for r in reqs) > old_end
+        assert all(r.arrival < 60.0 for r in reqs)
+    # and the per-seed arrival count stays unbiased on average
+    counts = [len(gen_requests("m", "burstgpt", 0.5, 60.0, seed=s))
+              for s in range(200)]
+    assert abs(np.mean(counts) / (0.5 * 60.0) - 1.0) < 0.1
+
+
+def test_gen_requests_zero_rate_is_empty():
+    assert gen_requests("m", "burstgpt", 0.0, 100.0, seed=0) == []
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_availability_walk_bounded_long_horizon(seed):
+    """Regression (unbounded drift): the clip ceiling used to be
+    recomputed from the *current* level each epoch, so the walk's bound
+    drifted with the walk itself.  Over a long horizon every level must
+    stay within 4x its per-(region, config) base."""
+    base = default_base_availability(CORE_CONFIGS, abundance=20)
+    walks = gen_availability(CORE_REGIONS, CORE_CONFIGS, 400, base,
+                             seed=seed)
+    for epoch in walks:
+        for (r, c), v in epoch.items():
+            b = base[c]
+            assert v <= 4.0 * max(b, 1.0) + 0.5
+
+
+def test_gen_requests_schedule_piecewise_rates():
+    rates = [2.0, 0.0, 6.0]
+    reqs = gen_requests_schedule("m", "azure_conv", rates, 120.0, seed=5)
+    for e, r in enumerate(rates):
+        n = len([q for q in reqs if e * 120.0 <= q.arrival < (e + 1) * 120.0])
+        assert abs(n - r * 120.0) <= max(0.35 * r * 120.0, 2)
+    assert all(q.arrival < 360.0 for q in reqs)
+    rids = [q.rid for q in reqs]
+    assert len(set(rids)) == len(rids)
 
 
 def test_workload_stats_consistent():

@@ -74,6 +74,17 @@ def extract_metrics() -> Dict[str, float]:
             out[f"allocator_update_speedup_{tag}"] = r["update_speedup"]
             out[f"allocator_objective_ok_{tag}"] = \
                 1.0 if r.get("objective_ok") else 0.0
+    d = _load("BENCH_control_loop.json")
+    if d:
+        for r in d.get("results", []):
+            s = r["scenario"]
+            out[f"control_loop_cost_parity_{s}"] = r["cost_parity"]
+            out[f"control_loop_goodput_parity_{s}"] = r["goodput_parity"]
+            if s in ("flash_crowd", "spot_preemption"):
+                # regression-tracked like every other ratio; the
+                # absolute beat-static (> 1.0) acceptance criterion is
+                # asserted inside benchmarks/control_loop.py itself
+                out[f"control_loop_vs_static_{s}"] = r["goodput_vs_static"]
     return out
 
 
@@ -85,6 +96,8 @@ def _metric_file(name: str) -> str:
         return "BENCH_template_gen.json"
     if name.startswith("allocator_"):
         return "BENCH_allocator.json"
+    if name.startswith("control_loop_"):
+        return "BENCH_control_loop.json"
     return ""
 
 
