@@ -1,0 +1,234 @@
+"""Fault-recovery benchmark (ROADMAP item 4: judge the storm scenarios
+on time-to-recover, not end-of-run cost).
+
+Every fault scenario (repro.control.scenarios.FAULT_SCENARIO_NAMES)
+is replayed — identical seeded requests, availability, and fault plan —
+under two recovery disciplines:
+
+* ``naive``    — the seed's fault handling made honest about detection:
+  no health-probe subsystem (a crashed node is only noticed after a
+  full epoch, during which it black-holes routed requests AND looks
+  alive to reconcile), instant unconditional restarts (no backoff, no
+  budget, no availability check), no admission control, and a router
+  blind to per-node degradation.
+* ``hardened`` — the fault-tolerant runtime: 15 s health probes,
+  ``RestartPolicy`` (exponential backoff per crash streak, per-epoch
+  restart budget, availability-checked replacements), ``ShedPolicy``
+  admission control, and the straggler-aware router weight.
+
+Both run the oracle demand path with an every-epoch re-solve, so the
+deltas isolate the recovery machinery rather than estimator or trigger
+quality.
+
+Reported per scenario (gate metrics are higher-is-better ratios):
+
+* ``recovery_speedup`` = naive TTR / hardened TTR, where TTR is the
+  time from the first injected fault until demand-weighted coverage
+  re-crosses ``RECOVER_FRAC`` of its pre-fault mean and holds it for
+  ``SUSTAIN_WINDOWS`` consecutive samples after the outage onset (a
+  dip usually starts after the fault instant, so naive first-crossing
+  semantics would measure nothing; ambient noise dips long after
+  recovery must not re-open the outage).  Never-recovered runs are
+  capped at the remaining run length and both TTRs are floored at one
+  sampling window, so the ratio stays finite and conservative.
+* ``coverage_ratio`` = hardened / naive mean coverage over the
+  post-fault windows (goodput *not* lost during the fault).  Coverage
+  is sampled in ``WINDOW_S`` windows straight from the simulator's
+  token log — epoch-end samples would quantize TTR coarser than the
+  detection latencies under test.
+
+The JSON artifact additionally records restart / detected-failure /
+shed counts and the goodput-lost integral per discipline.  The
+acceptance criterion — hardened beats naive TTR on ``crash_storm`` and
+``crash_loop`` — is asserted absolutely in here (not just gated
+against a pinned reference).
+
+Under BENCH_FAST the suite runs the CI smoke pair (crash_storm,
+straggler); ``fast_trimmed`` lists the rest so the bench gate skips —
+not fails — their reference points.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+from benchmarks.common import ART, FAST, Row, cached_library, scenario
+from repro.control import (FAULT_SCENARIO_NAMES, FaultInjector,
+                           RestartPolicy, goodput_lost, make_scenario,
+                           time_to_recover)
+from repro.core.allocator import AllocatorState
+from repro.runtime.cluster import ClusterRuntime
+from repro.simulator.sim import ShedPolicy
+
+N_EPOCHS = 12
+EPOCH_S = 240.0
+BASE_RATE = 2.0
+WARMUP = 2
+SEED = 2
+RECOVER_FRAC = 0.9              # coverage must re-cross 90% of pre-fault
+SUSTAIN_WINDOWS = 3             # ...and hold it for 3 windows straight
+SCENARIOS_FAST = ("crash_storm", "straggler")
+
+HARDENED_PROBE_S = 15.0
+NAIVE_PROBE_S = EPOCH_S         # no probe subsystem: an epoch goes by
+#                                 before anyone notices a dead node
+
+
+WINDOW_S = 60.0                 # recovery-metric sampling; epoch-end
+#                                 samples (240 s) would quantize TTR
+#                                 coarser than the detection latencies
+#                                 under test
+
+
+def _coverage_series(rt, sc):
+    """Demand-weighted decode coverage in WINDOW_S windows, read from
+    the simulator's token log (window-end timestamps)."""
+    times, vals = [], []
+    n_win = int(round(sc.n_epochs * sc.epoch_s / WINDOW_S))
+    for w in range(n_win):
+        t0, t1 = w * WINDOW_S, (w + 1) * WINDOW_S
+        e = min(int(t0 // sc.epoch_s), sc.n_epochs - 1)
+        cov = tot = 0.0
+        for d in sc.truth_demands[e]:
+            if d.phase != "decode":
+                continue
+            cov += min(rt.sim.goodput(d.model, t0, t1), d.tokens_per_s)
+            tot += d.tokens_per_s
+        times.append(t1)
+        vals.append(cov / max(tot, 1e-9))
+    return times, vals
+
+
+def _one_run(mode, name, models, regions, configs, wls, lib):
+    # regenerate the scenario per run: the simulator mutates Request
+    # objects in place, so disciplines must never share a trace
+    sc = make_scenario(name, models, regions, configs, wls,
+                       n_epochs=N_EPOCHS, epoch_s=EPOCH_S,
+                       base_rate=BASE_RATE, seed=SEED)
+    if mode == "hardened":
+        rt = ClusterRuntime(
+            models, regions, configs, lib, AllocatorState(), wls,
+            epoch_s=sc.epoch_s, spot_market=sc.spot_market,
+            health_check_s=HARDENED_PROBE_S,
+            restart_policy=RestartPolicy(backoff_base_s=20.0,
+                                         backoff_mult=2.0,
+                                         backoff_max_s=300.0,
+                                         budget_per_epoch=4),
+            shed_policy=ShedPolicy(max_queue_per_instance=32.0))
+    else:
+        rt = ClusterRuntime(
+            models, regions, configs, lib, AllocatorState(), wls,
+            epoch_s=sc.epoch_s, spot_market=sc.spot_market,
+            health_check_s=NAIVE_PROBE_S,
+            restart_policy=RestartPolicy(check_availability=False))
+        rt.sim.straggler_aware = False
+    inj = FaultInjector(sc.faults)
+    t0 = time.time()
+    res = rt.run(sc.requests, sc.availability, sc.truth_demands,
+                 fault_injector=inj)
+    wall = time.time() - t0
+    times, vals = _coverage_series(rt, sc)
+    t_fault = inj.first_fault_t
+    if t_fault is None:         # feed-only faults plan no events: the
+        # stress starts when the lying window opens
+        t_fault = sc.faults.start_epoch * sc.epoch_s
+    pre = [v for t, v in zip(times, vals)
+           if WARMUP * sc.epoch_s <= t <= t_fault]
+    pre_cov = sum(pre) / max(len(pre), 1)
+    thr = RECOVER_FRAC * pre_cov
+    t_end = sc.n_epochs * sc.epoch_s
+    ttr = min(time_to_recover(times, vals, t_fault, thr,
+                              sustain=SUSTAIN_WINDOWS),
+              t_end - t_fault)
+    post = [v for t, v in zip(times, vals) if t >= t_fault]
+    return {
+        "coverage_pre": pre_cov,
+        "coverage_post": sum(post) / max(len(post), 1),
+        "ttr_s": ttr,
+        "goodput_lost": goodput_lost(times, vals, pre_cov, t_fault,
+                                     sc.epoch_s),
+        "failed": res.total_failed(),
+        "restarted": res.total_restarted(),
+        "shed": res.total_shed(),
+        "recovery_epochs": res.recovery_epochs(),
+        "avg_cost": sum(e.cost_per_hour for e in res.epochs[WARMUP:])
+        / max(len(res.epochs) - WARMUP, 1),
+        "wall_s": wall,
+    }, sc, inj
+
+
+def run() -> None:
+    models, configs, regions, wls = scenario(extended=False)
+    lib = cached_library("core", models, configs, wls)
+    names = SCENARIOS_FAST if FAST else FAULT_SCENARIO_NAMES
+    results = []
+    for name in names:
+        out = {}
+        for mode in ("naive", "hardened"):
+            out[mode], sc, inj = _one_run(mode, name, models, regions,
+                                          configs, wls, lib)
+        nv, hd = out["naive"], out["hardened"]
+        row = {
+            "scenario": name,
+            "n_epochs": N_EPOCHS, "epoch_s": EPOCH_S,
+            "base_rate": BASE_RATE, "warmup": WARMUP,
+            "spot_market": sc.spot_market,
+            "recover_frac": RECOVER_FRAC,
+            "first_fault_t": inj.first_fault_t,
+            "n_fault_events": len(inj.events),
+            "ttr_s": {m: out[m]["ttr_s"] for m in out},
+            "coverage_pre": {m: out[m]["coverage_pre"] for m in out},
+            "coverage_post": {m: out[m]["coverage_post"] for m in out},
+            "goodput_lost": {m: out[m]["goodput_lost"] for m in out},
+            "failed": {m: out[m]["failed"] for m in out},
+            "restarted": {m: out[m]["restarted"] for m in out},
+            "shed": {m: out[m]["shed"] for m in out},
+            "recovery_epochs": {m: out[m]["recovery_epochs"]
+                                for m in out},
+            "avg_cost": {m: out[m]["avg_cost"] for m in out},
+            # both TTRs floored at one sampling window so a
+            # zero-dip run cannot pin an unreachable reference ratio
+            "recovery_speedup": max(nv["ttr_s"], WINDOW_S)
+            / max(hd["ttr_s"], WINDOW_S),
+            "coverage_ratio": hd["coverage_post"]
+            / max(nv["coverage_post"], 1e-9),
+        }
+        if name in ("crash_storm", "crash_loop") \
+                and row["recovery_speedup"] <= 1.0:
+            # the acceptance criterion is absolute, not relative to a
+            # pinned reference — fail the benchmark (and CI) if the
+            # hardened runtime stops beating naive recovery
+            raise AssertionError(
+                f"{name}: hardened time-to-recover no longer beats "
+                f"naive (speedup={row['recovery_speedup']:.3f} <= 1.0; "
+                f"ttr hardened={hd['ttr_s']:.0f}s "
+                f"naive={nv['ttr_s']:.0f}s)")
+        results.append(row)
+        Row.add(f"fault_{name}",
+                (nv["wall_s"] + hd["wall_s"]) * 1e6 / N_EPOCHS,
+                f"ttr_naive={nv['ttr_s']:.0f}s"
+                f";ttr_hard={hd['ttr_s']:.0f}s"
+                f";speedup={row['recovery_speedup']:.2f}"
+                f";cov_ratio={row['coverage_ratio']:.2f}"
+                f";restarts={nv['restarted']}/{hd['restarted']}")
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_fault.json"), "w") as f:
+        json.dump({
+            "setup": "core", "n_epochs": N_EPOCHS, "epoch_s": EPOCH_S,
+            "base_rate": BASE_RATE, "warmup": WARMUP, "seed": SEED,
+            "recover_frac": RECOVER_FRAC, "window_s": WINDOW_S,
+            "fast_trimmed": [n for n in FAULT_SCENARIO_NAMES
+                             if n not in names],
+            "results": results,
+        }, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()
+    Row.flush(os.path.join(ART, "bench_fault.csv"))

@@ -21,7 +21,7 @@ import traceback
 def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.common import ART, Row
-    from benchmarks import (allocator_bench, control_loop,
+    from benchmarks import (allocator_bench, control_loop, fault_bench,
                             fig1_heterogeneity, fig2_joint, fig6_fidelity,
                             fig7_cost, fig9_scarce, fig11_imbalance,
                             fig12_helix, fig13_sensitivity, roofline,
@@ -34,6 +34,7 @@ def main() -> None:
         ("sim_loop", sim_loop.run),
         ("allocator", allocator_bench.run),
         ("control_loop", control_loop.run),
+        ("fault", fault_bench.run),
         ("fig1", fig1_heterogeneity.run),
         ("fig2", fig2_joint.run),
         ("fig6", fig6_fidelity.run),

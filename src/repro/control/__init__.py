@@ -10,14 +10,24 @@ simulator's observables and the online allocator.
 * ``scenarios`` — named, seeded scenario generators (diurnal demand,
   flash crowd, popularity shift, spot-preemption storms, region
   outage), each producing (requests, availability, truth-demand).
+* ``faults`` — seeded fault injection (independent crashes, correlated
+  per-(region, device-family) bursts, stragglers, flaky restarts,
+  stale availability feeds) plus the hardened ``RestartPolicy`` and
+  the time-to-recover / goodput-lost recovery metrics.
 """
 from repro.control.controller import (ControllerConfig, ReSolveController,
                                       ResolveDecision, TransitionPlanner)
 from repro.control.estimator import DemandEstimator, EstimatorConfig
-from repro.control.scenarios import SCENARIO_NAMES, Scenario, make_scenario
+from repro.control.faults import (FaultConfig, FaultEvent, FaultInjector,
+                                  RestartPolicy, goodput_lost,
+                                  time_to_recover)
+from repro.control.scenarios import (FAULT_SCENARIO_NAMES, SCENARIO_NAMES,
+                                     Scenario, make_scenario)
 
 __all__ = [
     "ControllerConfig", "DemandEstimator", "EstimatorConfig",
-    "ReSolveController", "ResolveDecision", "SCENARIO_NAMES", "Scenario",
-    "TransitionPlanner", "make_scenario",
+    "FAULT_SCENARIO_NAMES", "FaultConfig", "FaultEvent", "FaultInjector",
+    "ReSolveController", "ResolveDecision", "RestartPolicy",
+    "SCENARIO_NAMES", "Scenario", "TransitionPlanner", "goodput_lost",
+    "make_scenario", "time_to_recover",
 ]

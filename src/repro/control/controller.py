@@ -51,7 +51,8 @@ class ControllerConfig:
 class ResolveDecision:
     resolve: bool
     reason: str                     # initial/demand_drift/avail_delta/
-    #                                 preempted/cadence/cooldown/steady
+    #                                 preempted/failure/cadence/
+    #                                 cooldown/steady
 
 
 class ReSolveController:
@@ -99,7 +100,8 @@ class ReSolveController:
     # ----------------------------------------------------------- decide
     def decide(self, epoch: int, demands: Sequence[Demand],
                availability: Dict[Tuple[str, str], int],
-               n_preempted: int = 0) -> ResolveDecision:
+               n_preempted: int = 0,
+               n_failed: int = 0) -> ResolveDecision:
         cfg = self.cfg
         self._since += 1
         if self._ref_demand is None:
@@ -110,6 +112,11 @@ class ReSolveController:
             # arming — the reconcile loop cannot replace nodes whose
             # supply is gone; only a re-solve can move the capacity
             return ResolveDecision(True, "preempted")
+        if n_failed > 0:
+            # detected node failures get the same emergency treatment:
+            # the restart path may have been blocked (backoff, budget,
+            # vanished availability), so re-place the lost capacity now
+            return ResolveDecision(True, "failure")
         dd = self.demand_drift(demands)
         da = self.avail_delta(availability)
         # Schmitt re-arming: a trigger that fired stays disarmed until

@@ -26,12 +26,21 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.control.faults import FaultConfig
 from repro.core.allocator import Demand
 from repro.traces.workloads import (Request, default_base_availability,
                                     gen_availability, gen_requests_schedule)
 
 SCENARIO_NAMES = ("diurnal", "flash_crowd", "popularity_shift",
                   "spot_preemption", "region_outage")
+
+# fault-injection scenarios (ROADMAP item 4): flat demand, the fault
+# process is the stressor.  Kept out of SCENARIO_NAMES — they need a
+# FaultInjector wired into ClusterRuntime.run to mean anything, and
+# their runs are judged on time-to-recover (benchmarks/fault_bench.py),
+# not the estimated-vs-oracle parities of the control_loop suite.
+FAULT_SCENARIO_NAMES = ("crash_storm", "straggler", "crash_loop",
+                        "stale_feed")
 
 
 @dataclass
@@ -45,6 +54,10 @@ class Scenario:
     rates: Dict[str, List[float]]           # req/s per model per epoch
     spot_market: bool = False               # availability = total supply
     meta: Dict = field(default_factory=dict)
+    # fault-process knobs for a FaultInjector (None = fault-free);
+    # every run of the scenario should build its own injector from
+    # this so hardened/naive comparisons replay identical faults
+    faults: "FaultConfig" = None
 
 
 # ------------------------------------------------------ rate schedules
@@ -86,11 +99,12 @@ def _rate_schedules(name: str, models: Sequence[str], n_epochs: int,
             rates[src][e] = base_rate * (1.6 - 1.2 * w)
             rates[dst][e] = base_rate * (0.4 + 1.2 * w)
         meta = {"src": src, "dst": dst}
-    elif name in ("spot_preemption", "region_outage"):
-        pass                                # supply-side: rates stay flat
+    elif name in ("spot_preemption", "region_outage") \
+            or name in FAULT_SCENARIO_NAMES:
+        pass                # supply/fault-side: rates stay flat
     else:
         raise ValueError(f"unknown scenario {name!r}; "
-                         f"choose from {SCENARIO_NAMES}")
+                         f"choose from {SCENARIO_NAMES + FAULT_SCENARIO_NAMES}")
     return rates, meta
 
 
@@ -166,6 +180,41 @@ def _outage_availability(regions, configs, n_epochs: int,
     return out, {"region": victim, "down_epochs": down}
 
 
+# ------------------------------------------------------ fault processes
+def _fault_config(name: str, n_epochs: int, epoch_s: float,
+                  seed: int) -> FaultConfig:
+    """The fault process behind each FAULT_SCENARIO_NAMES entry.  The
+    fault window opens after a warm-up third of the run and (except
+    for the stale feed, which lies for the whole run) closes again so
+    the tail measures recovery, not steady-state attrition."""
+    start = max(n_epochs // 3, 1)
+    fseed = seed * 7919 + 31 * len(name)
+    if name == "crash_storm":
+        # one correlated (region, device-family) burst, plus light
+        # independent attrition while the window is open
+        return FaultConfig(seed=fseed, burst_rate=1.0, burst_frac=0.7,
+                           crash_rate=0.05, start_epoch=start,
+                           stop_epoch=start + 1)
+    if name == "straggler":
+        return FaultConfig(seed=fseed, straggler_rate=0.3,
+                           straggler_factor=4.0,
+                           straggler_duration_s=2.0 * epoch_s,
+                           start_epoch=start, stop_epoch=start + 2)
+    if name == "crash_loop":
+        # heavy crashes whose replacements usually die again — restart
+        # discipline fuel (a light rate never dents coverage on a
+        # provisioned-with-headroom cluster, so the TTR gate would
+        # measure nothing)
+        return FaultConfig(seed=fseed, crash_rate=0.5,
+                           restart_flake_p=0.7, flake_after_s=20.0,
+                           start_epoch=start, stop_epoch=start + 3)
+    if name == "stale_feed":
+        return FaultConfig(seed=fseed, feed_lag_epochs=2,
+                           feed_stale_p=0.3, start_epoch=1)
+    raise ValueError(f"unknown fault scenario {name!r}; "
+                     f"choose from {FAULT_SCENARIO_NAMES}")
+
+
 # -------------------------------------------------------------- builder
 def make_scenario(name: str, models: Dict, regions: Sequence,
                   configs: Sequence, workloads: Dict, *,
@@ -178,11 +227,18 @@ def make_scenario(name: str, models: Dict, regions: Sequence,
     rates, meta = _rate_schedules(name, list(models), n_epochs,
                                   base_rate, rng)
     base = default_base_availability(configs, abundance=abundance)
-    spot = name in ("spot_preemption", "region_outage")
-    if name == "spot_preemption":
+    # the stale-feed scenario only bites when supply actually moves
+    # under the lying feed: run it on the spot-preemption storm market
+    spot = name in ("spot_preemption", "region_outage", "stale_feed")
+    faults = None
+    if name in FAULT_SCENARIO_NAMES:
+        faults = _fault_config(name, n_epochs, epoch_s, seed)
+        meta = {"faults": name, "start_epoch": faults.start_epoch,
+                "stop_epoch": faults.stop_epoch}
+    if name in ("spot_preemption", "stale_feed"):
         avail, storms = _storm_availability(regions, configs, n_epochs,
                                             base, rng)
-        meta = {"storms": storms}
+        meta["storms"] = storms
     elif name == "region_outage":
         avail, meta = _outage_availability(regions, configs, n_epochs, base)
     else:
@@ -206,4 +262,4 @@ def make_scenario(name: str, models: Dict, regions: Sequence,
             row.append(Demand(m, "decode", r * wl.avg_output))
         truth.append(row)
     return Scenario(name, n_epochs, epoch_s, reqs, avail, truth, rates,
-                    spot_market=spot, meta=meta)
+                    spot_market=spot, meta=meta, faults=faults)

@@ -529,8 +529,15 @@ class AllocatorState:
                             lb=row_lb, ub=row_ub)
         build_s = time.time() - t0
 
-        res = mdl.solve(time_limit=p.time_limit, gap=MIP_GAP)
-        if not res.ok:
+        try:
+            res = mdl.solve(time_limit=p.time_limit, gap=MIP_GAP)
+        except Exception:
+            # degradation ladder: a crashing solver is treated exactly
+            # like a timed-out one — fall through to the incumbent
+            # fallback (or a not-ok Allocation) rather than raising
+            # into the epoch loop and draining the cluster
+            res = None
+        if res is None or not res.ok:
             if inc is not None:
                 alloc = self._extract(inc[0], None, inc[1], tokens, cur,
                                       p, t0, mdl.n, build_s)

@@ -73,6 +73,23 @@ class EpochMetrics:
     trigger_reason: str = "epoch"
     # spot-market preemptions suffered this epoch (reclaimed instances)
     n_preempted: int = 0
+    # fault-recovery observability: failures *detected* this epoch (the
+    # coordinator's view — a crash is counted when its health probe
+    # fires, which may be the epoch after the node actually died),
+    # replacements started mid-epoch, and arrivals shed by admission
+    # control
+    n_failed: int = 0
+    n_restarted: int = 0
+    n_shed: int = 0
+    # the epoch touched fault recovery: a failure was detected, a
+    # replacement started, or a crashed-but-undetected node is still
+    # black-holing requests at the epoch edge
+    recovering: bool = False
+    # degradation-ladder provenance of the epoch's allocation target:
+    # solved / fallback (solver timed out, incumbent returned) /
+    # last_good (solve failed outright, previous target kept) / kept
+    # (trigger-gated skip) / none (failed with no previous target)
+    alloc_source: str = "solved"
 
 
 @dataclass
@@ -92,6 +109,26 @@ class RunResult:
     def n_resolves(self) -> int:
         return sum(1 for e in self.epochs if e.resolve_triggered)
 
+    def total_failed(self) -> int:
+        if not self.epochs:
+            return 0
+        return sum(e.n_failed for e in self.epochs)
+
+    def total_restarted(self) -> int:
+        if not self.epochs:
+            return 0
+        return sum(e.n_restarted for e in self.epochs)
+
+    def total_shed(self) -> int:
+        if not self.epochs:
+            return 0
+        return sum(e.n_shed for e in self.epochs)
+
+    def recovery_epochs(self) -> int:
+        if not self.epochs:
+            return 0
+        return sum(1 for e in self.epochs if e.recovering)
+
 
 AllocatorFn = Callable[[AllocProblem], Allocation]
 
@@ -103,7 +140,9 @@ class ClusterRuntime:
                  workloads: Dict, epoch_s: float = 360.0,
                  init_amortize_s: float = 3600.0,
                  allocator_time_limit: float = 60.0,
-                 sim_batched: bool = True, spot_market: bool = False):
+                 sim_batched: bool = True, spot_market: bool = False,
+                 health_check_s: float = 0.0, restart_policy=None,
+                 shed_policy=None):
         self.models = models
         self.regions = regions
         self.configs = configs
@@ -119,8 +158,18 @@ class ClusterRuntime:
         self.spot_market = spot_market
         self.init_k = INIT_DELAY_S / init_amortize_s
         self.time_limit = allocator_time_limit
+        # failure-detection latency: a crashed node black-holes routed
+        # work for this long before its health probe fires and the
+        # queue is re-routed (0 = the seed's instant detection)
+        self.health_check_s = health_check_s
+        # repro.control.faults.RestartPolicy (backoff + budget +
+        # availability check); None = immediate availability-checked
+        # restart on every detected failure
+        self.restart_policy = restart_policy
         self.sim = Simulator(models, {c.name: c for c in configs}, workloads,
                              batched=sim_batched)
+        if shed_policy is not None:     # admission control / load shed
+            self.sim.shed_policy = shed_policy
         self.region_by_name: Dict[str, Region] = {r.name: r for r in regions}
         self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
         # last successful allocation, kept as the target when a later
@@ -130,6 +179,13 @@ class ClusterRuntime:
         # current epoch's n_new / init_cost by run())
         self._epoch_new = 0
         self._epoch_init_cost = 0.0
+        # fault-recovery accounting for the running epoch
+        self._epoch_failed = 0
+        self._epoch_restarted = 0
+        self._epoch_failed_keys: set = set()
+        self._fail_pending = 0          # detections since the last decide
+        self._epoch_avail: Optional[Dict[Tuple[str, str], int]] = None
+        self._injector = None
 
     # ------------------------------------------------------------ helpers
     def _held_nodes(self) -> Dict[Tuple[str, str], int]:
@@ -234,7 +290,8 @@ class ClusterRuntime:
 
     def fail_instance(self, rng: random.Random) -> Optional[SimInstance]:
         """Kill one random live instance (node-failure injection) and
-        immediately start a replacement toward the allocation target.
+        start a replacement toward the allocation target — if the
+        epoch's availability admits one.
 
         Victims are drawn from *serving* (ready) instances when any
         exist — a node that is still initializing has nothing to lose to
@@ -242,7 +299,9 @@ class ClusterRuntime:
         just-started replacement at the epoch boundary left the cluster
         permanently without capacity. The replacement pays the usual
         ``INIT_DELAY_S`` and its amortized init cost is charged to the
-        current epoch.
+        current epoch.  Under ``spot_market=True`` the replacement goes
+        through the same availability check ``reconcile`` applies: a
+        fully-reclaimed (region, config) cannot conjure one back.
         """
         live = [i for i in self.sim.instances.values()
                 if not i.dead and not i.draining]
@@ -256,23 +315,90 @@ class ClusterRuntime:
         # queued for admission — both already prefilled) rejoin the
         # decode pool via _join_decode, never back through prefill
         self.sim.kill_instance(inst)
+        self._epoch_failed += 1
+        self._epoch_failed_keys.add((inst.region, inst.template.key))
         # immediate replacement: the standing allocation still targets
         # this (region, template); do not wait for the next re-solve
+        self._restart(inst)
+        return inst
+
+    # ----------------------------------------------- crash / detection
+    def _crash(self, inst: SimInstance):
+        """Node failure with health-check detection latency: the
+        simulator black-holes the node until the probe fires, then the
+        coordinator notices (``_on_failure_detected``) and the restart
+        policy decides what happens."""
+        if inst.dead or inst.failed:
+            return
+        t_detect = self.sim.crash_instance(inst, self.health_check_s)
+        # pushed after crash_instance's own kill event at t_detect, so
+        # the queue has been re-routed by the time the coordinator acts
+        self.sim.ev.push(t_detect, self._on_failure_detected, inst)
+
+    def _on_failure_detected(self, inst: SimInstance):
+        self._epoch_failed += 1
+        self._fail_pending += 1
+        key = (inst.region, inst.template.key)
+        self._epoch_failed_keys.add(key)
+        pol = self.restart_policy
+        if pol is None:
+            self._restart(inst)
+            return
+        if not pol.allow():
+            return      # restart budget exhausted: the epoch-edge
+            # reconcile (or the failure-triggered re-solve) heals it
+        delay = pol.delay(key)
+        pol.note_restart(key)
+        if delay > 0.0:
+            self.sim.ev.push(self.sim.now + delay, self._restart, inst)
+        else:
+            self._restart(inst)
+
+    def _restart(self, inst: SimInstance) -> Optional[SimInstance]:
+        """Start a replacement for a failed instance, bounded by the
+        epoch's availability; charges the amortized init cost to the
+        current epoch and draws the injector's flaky-restart outcome."""
+        if not self._restart_fits(inst.region, inst.template):
+            # the capacity is gone (e.g. fully-reclaimed spot supply):
+            # only a re-solve can move the load somewhere that exists
+            return None
         key = (inst.region, inst.template.key)
         repl = self.sim.add_instance(inst.region, inst.template)
         self.running.setdefault(key, []).append(repl)
         region = self.region_by_name[inst.region]
         self._epoch_new += 1
+        self._epoch_restarted += 1
         self._epoch_init_cost += inst.template.cost(
             region, self.library.config_by_name) * self.init_k
-        return inst
+        if self._injector is not None:
+            flake = self._injector.restart_outcome()
+            if flake is not None:       # crash loop: it dies again
+                self.sim.ev.push(repl.ready_at + flake, self._crash, repl)
+        return repl
+
+    def _restart_fits(self, region_name: str, template) -> bool:
+        """Same availability bound ``reconcile`` applies to scale-up:
+        current holdings plus the replacement must fit the availability
+        the epoch solved against (which includes held nodes outside the
+        spot market, so non-spot replacements always fit)."""
+        pol = self.restart_policy
+        if pol is not None and not pol.check_availability:
+            return True
+        avail = self._epoch_avail
+        if avail is None:       # outside run(): nothing to check against
+            return True
+        held = self._held_nodes()
+        return all(held.get((region_name, c), 0) + n
+                   <= avail.get((region_name, c), 0)
+                   for c, n in template.counts)
 
     # ---------------------------------------------------------------- run
     def run(self, requests: List[Request],
             availability_per_epoch: List[Dict[Tuple[str, str], int]],
             demands_per_epoch: Optional[List[List[Demand]]] = None,
             fail_rate_per_epoch: float = 0.0, seed: int = 0,
-            estimator=None, controller=None, planner=None) -> RunResult:
+            estimator=None, controller=None, planner=None,
+            fault_injector=None) -> RunResult:
         """Run the epoch loop.
 
         Demand source: pass oracle ``demands_per_epoch`` (the classic
@@ -288,8 +414,17 @@ class ClusterRuntime:
         additionally feeds the allocator the cheapest-to-reach recent
         target as its incumbent warm start (requires an allocator with
         ``set_incumbent``, e.g. ``AllocatorState``).
+
+        Fault injection: a ``repro.control.faults.FaultInjector`` plans
+        per-epoch crash / straggler events (scheduled mid-epoch into
+        the simulator), may serve the control plane a stale
+        availability feed (the physical market — spot reclaim,
+        reconcile caps, restart checks — always uses the true series),
+        and draws flaky-restart outcomes for every replacement the
+        restart path starts.
         """
         rng = random.Random(seed)
+        self._injector = fault_injector
         if demands_per_epoch is not None and estimator is not None:
             raise ValueError("pass oracle demands_per_epoch OR an "
                              "estimator, not both")
@@ -309,27 +444,46 @@ class ClusterRuntime:
                 demands = estimator.estimate(horizon_s=self.epoch_s)
             else:
                 demands = demands_per_epoch[e]
-            raw = dict(availability_per_epoch[e])
+            true_avail = dict(availability_per_epoch[e])
             n_preempted = 0
             if self.spot_market:
                 # the series is total supply: shed preempted holdings,
-                # then solve against the supply itself
-                n_preempted = self._reclaim(raw)
+                # then solve against the supply itself.  Preemption is
+                # physical — it uses the true series even when the
+                # control plane's feed is stale.
+                n_preempted = self._reclaim(true_avail)
+            if fault_injector is not None:
+                raw = dict(fault_injector.observed_availability(
+                    e, true_avail))
+            else:
+                raw = true_avail
+            if self.spot_market:
                 avail = raw
+                rec_avail = true_avail
             else:
                 avail = dict(raw)       # the controller drifts on the
                 # raw market series; only the solver sees held nodes
+                rec_avail = dict(true_avail)
                 for k, n in self._held_nodes().items():
                     avail[k] = avail.get(k, 0) + n  # we keep what we hold
+                    rec_avail[k] = rec_avail.get(k, 0) + n
+            # physical capacity bound for reconcile scale-up and
+            # mid-epoch restarts: the provider grants what exists, not
+            # what a stale feed claims
+            self._epoch_avail = rec_avail
+            n_failed_detected = self._fail_pending
+            self._fail_pending = 0
             if controller is not None:
                 decision = controller.decide(e, demands, raw,
-                                             n_preempted=n_preempted)
+                                             n_preempted=n_preempted,
+                                             n_failed=n_failed_detected)
                 resolve, reason = decision.resolve, decision.reason
             else:
                 resolve, reason = True, "epoch"
             if not resolve and self._last_alloc is None:
                 resolve, reason = True, "bootstrap"
             solver_failed = False
+            alloc_source = "kept"
             if resolve:
                 prob = AllocProblem(
                     self.regions, self.configs, avail, demands,
@@ -344,15 +498,23 @@ class ClusterRuntime:
                     or getattr(alloc, "fallback", False)
                 solve_s, unmet = alloc.solve_seconds, alloc.unmet
                 if not alloc.ok:
-                    # failed/timed-out solve: an empty allocation is NOT
-                    # a scale-to-zero target — keep the previous epoch's
-                    # allocation (if any) instead of draining the
-                    # cluster, reporting its shortfall against *this*
-                    # epoch's demands
+                    # bottom rungs of the degradation ladder: the solve
+                    # failed outright (no incumbent to fall back on) —
+                    # an empty allocation is NOT a scale-to-zero
+                    # target, keep the previous epoch's allocation (if
+                    # any) instead of draining the cluster, reporting
+                    # its shortfall against *this* epoch's demands
                     if self._last_alloc is not None:
                         alloc = self._last_alloc
                         unmet = self._shortfall(alloc, demands)
+                        alloc_source = "last_good"
+                    else:
+                        alloc_source = "none"
                 else:
+                    # middle rung: a deadline-bounded solve that timed
+                    # out returns the incumbent (Allocation.fallback)
+                    alloc_source = "fallback" if solver_failed \
+                        else "solved"
                     self._last_alloc = alloc
                     # a fallback (failed-HiGHS) result is a usable
                     # target but NOT a solve: the controller's drift
@@ -370,14 +532,30 @@ class ClusterRuntime:
                 alloc = self._last_alloc
                 solve_s = 0.0
                 unmet = self._shortfall(alloc, demands)
-            n_new, n_drained, init_cost = self.reconcile(alloc, avail)
+            n_new, n_drained, init_cost = self.reconcile(alloc, rec_avail)
             self._epoch_new = 0
             self._epoch_init_cost = 0.0
+            self._epoch_failed = 0
+            self._epoch_restarted = 0
+            prev_failed_keys = self._epoch_failed_keys
+            self._epoch_failed_keys = set()
+            shed0 = self.sim.shed
+            if self.restart_policy is not None:
+                self.restart_policy.begin_epoch(prev_failed_keys)
             if fail_rate_per_epoch > 0 and rng.random() < fail_rate_per_epoch:
                 # the node dies at a random point of the epoch, not at
                 # the reconcile instant
                 self.sim.ev.push(t0 + rng.random() * self.epoch_s,
                                  self.fail_instance, rng)
+            if fault_injector is not None:
+                for f in fault_injector.plan_epoch(
+                        e, t0, self.epoch_s,
+                        self.sim.instances.values()):
+                    if f.kind == "crash":
+                        self.sim.ev.push(f.t, self._crash, f.inst)
+                    else:
+                        self.sim.ev.push(f.t, self.sim.degrade_instance,
+                                         f.inst, f.factor, f.duration_s)
             self.sim.run_until(t1)
             if estimator is not None:
                 estimator.observe(self.sim, t0, t1)
@@ -402,5 +580,13 @@ class ClusterRuntime:
                 solve_seconds=solve_s, unmet=unmet,
                 solver_failed=solver_failed,
                 resolve_triggered=resolve, trigger_reason=reason,
-                n_preempted=n_preempted))
+                n_preempted=n_preempted,
+                n_failed=self._epoch_failed,
+                n_restarted=self._epoch_restarted,
+                n_shed=self.sim.shed - shed0,
+                recovering=(self._epoch_failed > 0
+                            or self._epoch_restarted > 0
+                            or any(i.failed and not i.dead
+                                   for i in self.sim.instances.values())),
+                alloc_source=alloc_source))
         return result

@@ -49,6 +49,7 @@ import heapq
 import itertools
 from bisect import bisect_right
 from collections import deque
+from dataclasses import dataclass
 from itertools import accumulate, islice, repeat
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -63,6 +64,21 @@ from repro.traces.workloads import Request
 INIT_DELAY_S = 90.0           # node start + weight load + warmup (§5.1)
 
 SPAN_MAX = 4096               # hard cap on the adaptive span budget
+
+
+@dataclass
+class ShedPolicy:
+    """Admission control: shed a new arrival when its prefill pool's
+    total queued requests exceed ``max_queue_per_instance`` per live
+    *ready* instance — a drain bound: backlog beyond it cannot be
+    worked off before it goes stale, so accepting it only inflates
+    every queue behind it.  Shedding applies to fresh arrivals at
+    admission (``_on_arrival``) only; requests already admitted —
+    including cold-start holds being flushed and a killed instance's
+    re-routed queue — are never shed.  With no ready prefill instance
+    the cold-start hold/drop path decides instead."""
+
+    max_queue_per_instance: float = 32.0
 
 
 class EventQueue:
@@ -279,6 +295,9 @@ class SimInstance:
         self.ready_at = ready_at
         self.draining = False
         self.dead = False
+        self.failed = False     # crashed but not yet health-check detected
+        self.slow_factor = 1.0  # straggler: iteration times scale by this
+        self._degrade_gen = 0   # cancels stale straggler-recovery events
         self.busy = False
         self.queue: Deque[Request] = deque()    # prefill / decode admission
         self.resident: List[Tuple[int, Request, int, int]] = []
@@ -323,6 +342,12 @@ class Simulator:
         self.prefill_lat: Dict[str, List[float]] = {m: [] for m in models}
         self.finished: List[Request] = []
         self.dropped: int = 0
+        self.shed_policy: Optional[ShedPolicy] = None
+        self.shed: int = 0                      # cumulative shed arrivals
+        self.shed_by_model: Dict[str, int] = {m: 0 for m in models}
+        # router knows per-node degradation (health telemetry); the
+        # naive runtime of benchmarks/fault_bench.py turns this off
+        self.straggler_aware = True
 
     # ------------------------------------------------------------ cluster
     def add_instance(self, region: str, template: ServingTemplate,
@@ -382,6 +407,65 @@ class Simulator:
             for req in q:
                 self.ev.push(self.now, self._on_arrival, req)
 
+    def crash_instance(self, inst: SimInstance,
+                       detect_s: float = 0.0) -> float:
+        """Node failure with health-check detection latency.  The node
+        stops serving immediately — in-flight batched accounting is
+        settled exactly as in ``kill_instance`` — but the coordinator
+        does not know yet: the instance stays in its routing pool,
+        black-holing routed requests into its queue, until the health
+        probe fires ``detect_s`` later and ``kill_instance`` re-routes
+        everything it accumulated.  ``detect_s <= 0`` is instant
+        detection (identical to ``kill_instance``).  Returns the
+        detection time."""
+        if inst.dead or inst.failed:
+            return self.now
+        if detect_s <= 0.0:
+            self.kill_instance(inst)
+            return self.now
+        sp = inst.span
+        if sp is not None:
+            # settle like _interrupt_span, but the in-flight iteration
+            # is lost instead of converted: the crashed node never
+            # completes it (the oracle's pending event no-ops on the
+            # failed flag).  The EWMA still advances through its start,
+            # since the per-iteration loop updated it there.
+            n = min(bisect_right(sp.bounds, self.now), len(sp.bounds) - 1)
+            inst.ewma_load = self._ewma_replay(inst, sp, n + 1)
+            self._settle_runs(inst, sp, n)
+            inst._gen += 1
+            inst.span = None
+        inst.failed = True
+        inst.busy = False
+        t = self.now + detect_s
+        self.ev.push(t, self.kill_instance, inst)
+        return t
+
+    def degrade_instance(self, inst: SimInstance, factor: float,
+                         duration_s: Optional[float] = None):
+        """Straggler injection: scale the instance's iteration and
+        pipeline times by ``factor`` (>= 1) starting with the *next*
+        iteration — the in-flight one keeps the timing it was started
+        with, in both the batched and the per-iteration loop.  With
+        ``duration_s`` the node recovers to full speed that much later;
+        ``factor=1.0`` restores it immediately."""
+        if inst.dead or inst.failed:
+            return
+        factor = max(float(factor), 1.0)
+        if factor != inst.slow_factor and inst.span is not None:
+            self._interrupt_span(inst)
+        inst.slow_factor = factor
+        inst._dtc.clear()
+        inst._degrade_gen += 1
+        if duration_s is not None and factor != 1.0:
+            self.ev.push(self.now + duration_s, self._restore_speed,
+                         inst, inst._degrade_gen)
+
+    def _restore_speed(self, inst: SimInstance, gen: int):
+        if gen != inst._degrade_gen or inst.dead:
+            return          # superseded by a newer degrade, or gone
+        self.degrade_instance(inst, 1.0)
+
     def _pool_remove(self, inst: SimInstance):
         """Evict a dead instance from its routing pool so the router's
         per-request scan stays proportional to live instances."""
@@ -394,7 +478,8 @@ class Simulator:
         cut = self.now + 1e-9
         best = None
         for i in self._by_pool.get((model, phase), ()):
-            if not i.draining and not i.dead and i.ready_at > cut:
+            if not i.draining and not i.dead and not i.failed \
+                    and i.ready_at > cut:
                 if best is None or i.ready_at < best:
                     best = i.ready_at
         return best
@@ -489,6 +574,11 @@ class Simulator:
                 depth = self._depth_at(i)
                 e = self._ewma_at(i)
             w = i.template.throughput / (1.0 + e)
+            if i.slow_factor != 1.0 and self.straggler_aware:
+                # node health telemetry: a straggler's effective
+                # throughput is scaled down before the EWMA correction
+                # even notices the queues growing
+                w /= i.slow_factor
             ld = (depth + 1.0) / (w if w > 1e-9 else 1e-9)
             if best is None or ld < best_load:
                 best, best_load = i, ld
@@ -502,6 +592,16 @@ class Simulator:
         self.ev.push(req.arrival, self._on_arrival, req)
 
     def _on_arrival(self, req: Request):
+        # admission control applies to *fresh* arrivals only: a request
+        # re-entering here (a cold-start hold flushed at ready_at, or a
+        # killed prefill instance's re-routed queue) was admitted once
+        # already and its arrival time lies in the past
+        if self.shed_policy is not None \
+                and req.arrival >= self.now - 1e-9 \
+                and self._should_shed(req.model):
+            self.shed += 1
+            self.shed_by_model[req.model] += 1
+            return
         inst = self.route(req.model, "prefill")
         if inst is None:
             # cold start / pool re-initialization: hold the request and
@@ -517,10 +617,27 @@ class Simulator:
         inst.queue.append(req)
         self._maybe_start(inst)
 
+    def _should_shed(self, model: str) -> bool:
+        bound = self.shed_policy.max_queue_per_instance
+        cut = self.now + 1e-9
+        n_live = backlog = 0
+        for i in self._by_pool.get((model, "prefill"), ()):
+            if i.dead or i.draining or i.ready_at > cut:
+                # a still-initializing instance is cold start, not
+                # overload: its held arrivals will be flushed at
+                # ready_at, so they must not count against the drain
+                # bound (nor the instance toward capacity)
+                continue
+            n_live += 1         # failed-but-undetected counts as live:
+            backlog += len(i.queue)     # its stuck queue IS the backlog
+        return n_live > 0 and backlog > bound * n_live
+
     # ------------------------------------------------------------ prefill
     def _maybe_start(self, inst: SimInstance):
-        if inst.busy or inst.dead or self.now < inst.ready_at:
-            if not inst.busy and not inst.dead and self.now < inst.ready_at \
+        if inst.busy or inst.dead or inst.failed \
+                or self.now < inst.ready_at:
+            if not inst.busy and not inst.dead and not inst.failed \
+                    and self.now < inst.ready_at \
                     and (inst.queue or inst.resident):
                 self.ev.push(inst.ready_at, self._maybe_start, inst)
             return
@@ -536,6 +653,9 @@ class Simulator:
             # completes after the full pipeline traversal.
             free = inst.cm.prefill_iter_time(tokens)
             done = inst.cm.prefill_pipeline_latency(tokens)
+            if inst.slow_factor != 1.0:
+                free *= inst.slow_factor
+                done *= inst.slow_factor
             inst.busy = True
             inst.ewma_load = 0.9 * inst.ewma_load + 0.1 * len(inst.queue)
             self.ev.push(self.now + free, self._free, inst)
@@ -554,6 +674,12 @@ class Simulator:
             # no latency was recorded for the lost pass)
             for r in batch:
                 self.ev.push(self.now, self._on_arrival, r)
+            return
+        if inst.failed:
+            # crashed but not yet detected: the batch is lost in place.
+            # Its requests rejoin the stuck queue until the health
+            # probe fires and kill_instance re-routes them.
+            inst.queue.extendleft(reversed(batch))
             return
         for r in batch:
             r.prefill_done = self.now
@@ -583,6 +709,11 @@ class Simulator:
                 c = cm.decode_times(b)
             else:
                 c = (cm.decode_iter_time(b), cm.decode_pipeline_latency(b))
+            if inst.slow_factor != 1.0:
+                # straggler: both the iteration time and the perceived
+                # latency inflate, so a degraded node can fall out of
+                # SLO (the memo is cleared whenever the factor changes)
+                c = (c[0] * inst.slow_factor, c[1] * inst.slow_factor)
             inst._dtc[b] = c
         return c
 
@@ -838,6 +969,12 @@ class Simulator:
         if inst.dead:
             self._dispatch_decode(req)
             return
+        if inst.failed:
+            # the router still believes this node is alive: the request
+            # is stuck in its queue until the health probe fires and
+            # kill_instance re-routes it
+            inst.queue.append(req)
+            return
         inst._joined = True
         sp = inst.span
         if sp is not None:
@@ -858,6 +995,8 @@ class Simulator:
 
     def _decode_done(self, inst: SimInstance, lat: float, start: float,
                      dt: float):
+        if inst.failed:
+            return      # crashed mid-iteration: the work is lost
         inst.busy = False
         slo = inst.model.decode_slo_ms / 1e3
         ok = lat <= slo

@@ -1,0 +1,461 @@
+"""Fault-injection subsystem and failure-domain-aware recovery:
+injector determinism, detection latency, restart backoff/budget,
+admission control, stale feeds, the solver degradation ladder, and
+batched-vs-oracle bit-equivalence under every injected fault class."""
+import random
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.control import (FaultConfig, FaultInjector, ReSolveController,
+                           RestartPolicy, goodput_lost, make_scenario,
+                           time_to_recover)
+from repro.control.controller import ControllerConfig
+from repro.core.allocator import AllocatorState, AllocProblem, Demand, allocate
+from repro.core.hardware import CORE_REGIONS, make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import generate_templates
+from repro.runtime.cluster import ClusterRuntime, RunResult
+from repro.simulator.sim import INIT_DELAY_S, ShedPolicy, Simulator
+from repro.traces.workloads import gen_requests, workload_stats
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+WLS = {MODEL.name: WL}
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+CFG_BY_NAME = {c.name: c for c in CONFIGS}
+
+PRE, _ = generate_templates(MODEL, "prefill", CONFIGS, WL, n_max=2, rho=8.0)
+DEC, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=2, rho=8.0)
+PRE.sort(key=lambda t: -t.throughput)
+DEC.sort(key=lambda t: -t.throughput)
+
+
+# ---------------------------------------------------- injector planning
+def _stub(iid, region="r0", family="1xL40S"):
+    return SimpleNamespace(
+        iid=iid, region=region, dead=False, draining=False, failed=False,
+        template=SimpleNamespace(counts=((family, 1),), key=(family,)))
+
+
+def _plan_sig(inj, epoch, insts, epoch_s=240.0):
+    return [(f.t, f.kind, f.inst.iid, f.factor, f.duration_s)
+            for f in inj.plan_epoch(epoch, epoch * epoch_s, epoch_s, insts)]
+
+
+def test_injector_is_deterministic_and_streams_are_independent():
+    cfg = FaultConfig(seed=11, crash_rate=0.3, burst_rate=0.5,
+                      straggler_rate=0.2, restart_flake_p=0.5,
+                      feed_lag_epochs=1)
+    insts = [_stub(i, family="1xL40S" if i % 2 else "1xL4")
+             for i in range(8)]
+    a, b, c = FaultInjector(cfg), FaultInjector(cfg), FaultInjector(cfg)
+    for e in range(4):
+        sa = _plan_sig(a, e, insts)
+        # b interleaves restart draws and feed reads — the plan stream
+        # must not notice (independent RNGs per fault class)
+        for _ in range(3):
+            b.restart_outcome()
+        b.observed_availability(e, {("r0", "1xL40S"): e})
+        assert sa == _plan_sig(b, e, insts) == _plan_sig(c, e, insts)
+    assert a.events == c.events
+    assert a.first_fault_t == c.first_fault_t
+
+
+def test_injector_window_and_liveness_filters():
+    cfg = FaultConfig(seed=0, crash_rate=1.0, start_epoch=2, stop_epoch=3)
+    inj = FaultInjector(cfg)
+    insts = [_stub(i) for i in range(4)]
+    insts[1].dead = True
+    insts[2].draining = True
+    insts[3].failed = True
+    assert inj.plan_epoch(0, 0.0, 240.0, insts) == []
+    assert inj.plan_epoch(1, 240.0, 240.0, insts) == []
+    ev = inj.plan_epoch(2, 480.0, 240.0, insts)
+    # only the live instance crashes, inside the epoch window
+    assert [f.inst.iid for f in ev] == [0]
+    assert 480.0 <= ev[0].t <= 720.0
+    assert inj.plan_epoch(3, 720.0, 240.0, insts) == []
+    assert inj.first_fault_t == ev[0].t
+
+
+def test_burst_hits_one_failure_domain_at_one_instant():
+    cfg = FaultConfig(seed=5, burst_rate=1.0, burst_frac=1.0)
+    inj = FaultInjector(cfg)
+    insts = ([_stub(i, region="r0", family="1xL40S") for i in range(3)]
+             + [_stub(i + 3, region="r1", family="1xL4") for i in range(3)])
+    ev = inj.plan_epoch(0, 0.0, 240.0, insts)
+    doms = {(f.inst.region, f.inst.template.counts[0][0]) for f in ev}
+    assert len(doms) == 1, "a burst stays inside one (region, family)"
+    assert len({f.t for f in ev}) == 1, "a burst is a single instant"
+    assert len(ev) == 3                 # burst_frac=1.0: whole domain
+
+
+def test_stale_feed_lags_and_sticks_without_mutating_truth():
+    truth = [{("r0", "1xL40S"): e} for e in range(5)]
+    lag = FaultInjector(FaultConfig(seed=0, feed_lag_epochs=2,
+                                    start_epoch=1))
+    assert lag.observed_availability(0, truth[0]) == truth[0]
+    assert lag.observed_availability(1, truth[1]) == truth[0]
+    assert lag.observed_availability(2, truth[2]) == truth[0]
+    assert lag.observed_availability(3, truth[3]) == truth[1]
+    stuck = FaultInjector(FaultConfig(seed=0, feed_stale_p=1.0,
+                                      start_epoch=1))
+    assert stuck.observed_availability(0, truth[0]) == truth[0]
+    for e in range(1, 5):   # the feed never refreshes again
+        assert stuck.observed_availability(e, truth[e]) == truth[0]
+        assert truth[e] == {("r0", "1xL40S"): e}, "truth never mutated"
+
+
+# ------------------------------------------------------- restart policy
+def test_restart_policy_backoff_budget_and_streak_reset():
+    pol = RestartPolicy(backoff_base_s=10.0, backoff_mult=2.0,
+                        backoff_max_s=35.0, budget_per_epoch=2)
+    k = ("r0", ("dec",))
+    assert pol.delay(k) == 10.0
+    pol.note_restart(k)
+    assert pol.delay(k) == 20.0
+    pol.note_restart(k)
+    assert pol.delay(k) == 35.0         # capped below 10 * 2**2
+    # budget: two restarts per epoch, then denial until the epoch edge
+    assert pol.allow() and pol.allow() and not pol.allow()
+    pol.begin_epoch(failed_keys=[k])    # still failing: streak survives
+    assert pol.allow()
+    assert pol.delay(k) == 35.0
+    pol.begin_epoch(failed_keys=[])     # a clean epoch clears the streak
+    assert pol.delay(k) == 10.0
+
+
+def test_restart_policy_defaults_are_immediate():
+    pol = RestartPolicy()
+    assert pol.delay(("r0", ("x",))) == 0.0
+    assert all(pol.allow() for _ in range(1000))
+
+
+# ----------------------------------------------------- recovery metrics
+def test_time_to_recover_and_goodput_lost():
+    times = [10.0, 20.0, 30.0, 40.0]
+    vals = [0.95, 0.5, 0.7, 0.93]
+    # outage onset at t=20: the pre-dip sample at t=10 does not count
+    assert time_to_recover(times, vals, 0.0, 0.9) == 40.0
+    assert time_to_recover(times, vals, 15.0, 0.9) == 25.0
+    assert time_to_recover(times, vals, 15.0, 0.99) == float("inf")
+    assert time_to_recover(times, vals, 35.0, 0.9) == 0.0, "never dips"
+    # sustained recovery: a lone good sample inside the outage does not
+    # close it; a terminal good run shorter than `sustain` does
+    t2 = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0]
+    v2 = [0.95, 0.5, 0.92, 0.5, 0.93, 0.94]
+    assert time_to_recover(t2, v2, 0.0, 0.9, sustain=2) == 50.0
+    assert time_to_recover(t2, v2, 0.0, 0.9, sustain=3) == 50.0
+    assert time_to_recover(t2, v2, 0.0, 0.9, sustain=1) == 30.0
+    lost = goodput_lost(times, vals, 0.9, 15.0, 10.0)
+    assert lost == pytest.approx((0.4 + 0.2) * 10.0)
+    assert goodput_lost(times, vals, 0.0, 0.0, 10.0) == 0.0
+
+
+# ------------------------------------------------- simulator: detection
+def _sim(batched=True):
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, WLS, batched=batched)
+    sim.add_instance("r0", PRE[0], ready_delay=0.0)
+    return sim
+
+
+def test_crash_black_holes_until_probe_fires():
+    """A crashed-but-undetected decode node keeps receiving routed
+    requests and serves nothing; the probe's kill_instance re-routes the
+    accumulated queue and the run still finishes everything."""
+    sim = _sim()
+    victim = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    other = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    reqs = gen_requests(MODEL.name, MODEL.trace, 2.0, 120, seed=9)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(60.0)
+    tokens_at_crash = victim.tokens_out
+    t_det = sim.crash_instance(victim, detect_s=90.0)
+    assert t_det == pytest.approx(150.0)
+    assert victim.failed and not victim.dead
+    # double crash is a no-op (overlapping fault processes compose)
+    assert sim.crash_instance(victim, detect_s=10.0) == sim.now
+    sim.run_until(t_det - 1e-6)
+    assert not victim.dead, "undetected until the probe"
+    assert victim.tokens_out == tokens_at_crash, "black hole serves nothing"
+    sim.run_until(t_det + 1e-6)
+    assert victim.dead
+    sim.run_until(7200.0)
+    assert sim.dropped == 0
+    assert {r.rid for r in sim.finished} == {r.rid for r in reqs}
+    assert other.tokens_out > 0
+
+
+def test_crash_with_zero_detect_is_kill():
+    sim = _sim()
+    inst = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    assert sim.crash_instance(inst, detect_s=0.0) == sim.now
+    assert inst.dead and not inst.failed
+
+
+# ------------------------------------------------ simulator: stragglers
+def test_straggler_degrades_and_recovers():
+    sim = _sim()
+    slow = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    fast = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    for r in gen_requests(MODEL.name, MODEL.trace, 4.0, 240, seed=4):
+        sim.submit(r)
+    sim.run_until(30.0)
+    sim.degrade_instance(slow, 8.0, duration_s=120.0)
+    assert slow.slow_factor == 8.0
+    # straggler-aware router steers toward the healthy instance
+    assert sim.route(MODEL.name, "decode") is fast
+    sim.run_until(200.0)                # past now+duration: recovered
+    assert slow.slow_factor == 1.0
+    sim.run_until(7200.0)
+    assert sim.dropped == 0
+    assert fast.tokens_out > slow.tokens_out
+
+
+def test_degrade_noops_on_failed_and_dead():
+    sim = _sim()
+    inst = sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    sim.crash_instance(inst, detect_s=50.0)
+    sim.degrade_instance(inst, 4.0)
+    assert inst.slow_factor == 1.0
+    sim.run_until(100.0)                # probe fired: dead now
+    sim.degrade_instance(inst, 4.0)
+    assert inst.slow_factor == 1.0
+
+
+# ------------------------------------------- simulator: admission shed
+def test_shed_policy_bounds_prefill_backlog():
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, WLS)
+    sim.shed_policy = ShedPolicy(max_queue_per_instance=2.0)
+    sim.add_instance("r0", PRE[1], ready_delay=0.0)     # weakest prefill
+    sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    reqs = gen_requests(MODEL.name, MODEL.trace, 20.0, 60, seed=6)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(3600.0)
+    assert sim.shed > 0
+    assert sim.shed_by_model[MODEL.name] == sim.shed
+    # shed arrivals are counted, not silently dropped
+    assert sim.dropped == 0
+    assert len(sim.finished) + sim.shed == len(reqs)
+
+
+def test_shed_policy_off_by_default():
+    sim = _sim()
+    assert sim.shed_policy is None and sim.shed == 0
+
+
+# ------------------------------------- batched vs oracle, faults active
+def _fault_gauntlet(batched):
+    """Crash-with-latency, straggler, shed, and a replacement — the
+    full fault surface in one seeded run."""
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, WLS, batched=batched)
+    sim.shed_policy = ShedPolicy(max_queue_per_instance=24.0)
+    sim.add_instance("r0", PRE[0], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", PRE[1], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", DEC[0], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", DEC[1], ready_delay=INIT_DELAY_S)
+    reqs = gen_requests(MODEL.name, MODEL.trace, 3.0, 300, seed=13)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(120.0)
+    sim.crash_instance(sim.instances[2], detect_s=90.0)   # decode crash
+    sim.run_until(150.0)
+    sim.degrade_instance(sim.instances[3], 3.0, duration_s=120.0)
+    sim.run_until(200.0)
+    sim.crash_instance(sim.instances[0], detect_s=60.0)   # prefill crash
+    sim.run_until(240.0)
+    sim.add_instance("r0", DEC[0])          # replacement pays INIT_DELAY
+    for t in (360.0, 480.0, 3600.0):
+        sim.run_until(t)
+    return sim, reqs
+
+
+def test_batched_oracle_equivalence_under_faults():
+    """The batched loop stays bit-identical with the per-iteration
+    oracle under every injected fault class at once: same finished set,
+    same sheds, same per-request counters, same goodput windows."""
+    s1, r1 = _fault_gauntlet(batched=False)
+    s2, r2 = _fault_gauntlet(batched=True)
+    m = MODEL.name
+    assert s1.dropped == s2.dropped
+    assert s1.shed == s2.shed > 0
+    assert {r.rid for r in s1.finished} == {r.rid for r in s2.finished}
+    assert len(s1.tokens[m]) == len(s2.tokens[m])
+    fin = {r.rid for r in s1.finished}
+    d1 = {r.rid: (r.finish, r.prefill_done, r.decode_slo_ok,
+                  r.decode_tokens_ok) for r in r1 if r.rid in fin}
+    d2 = {r.rid: (r.finish, r.prefill_done, r.decode_slo_ok,
+                  r.decode_tokens_ok) for r in r2 if r.rid in fin}
+    assert d1 == d2
+    for t0 in range(0, 3600, 60):
+        assert s1.goodput(m, t0, t0 + 60) == s2.goodput(m, t0, t0 + 60)
+        assert s1.throughput(m, t0, t0 + 60) == \
+            s2.throughput(m, t0, t0 + 60)
+
+
+# ------------------------------------------------- runtime: restarts
+def test_spot_fail_instance_respects_reclaimed_supply(
+        phi4_runtime_library):
+    """Regression: under spot_market=True, fail_instance used to start
+    a replacement unconditionally — conjuring capacity on a fully
+    reclaimed (region, config) that the provider no longer sells."""
+    rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS,
+                        phi4_runtime_library, allocate, WLS,
+                        epoch_s=240.0, spot_market=True)
+    region = CORE_REGIONS[0].name
+    inst = rt.sim.add_instance(region, DEC[0])
+    rt.running[(region, DEC[0].key)] = [inst]
+    rt.sim.run_until(INIT_DELAY_S + 1.0)
+    rt._epoch_avail = {}                # the supply is fully reclaimed
+    rng = random.Random(0)
+    assert rt.fail_instance(rng) is inst and inst.dead
+    assert not [i for i in rt.sim.instances.values() if not i.dead], \
+        "no replacement may be conjured out of reclaimed supply"
+    # with supply back, the same failure path restarts a replacement
+    inst2 = rt.sim.add_instance(region, DEC[0])
+    rt.running[(region, DEC[0].key)].append(inst2)
+    rt.sim.run_until(rt.sim.now + INIT_DELAY_S + 1.0)
+    rt._epoch_avail = {(region, c.name): 99 for c in CONFIGS}
+    assert rt.fail_instance(rng) is inst2
+    live = [i for i in rt.sim.instances.values() if not i.dead]
+    assert len(live) == 1 and live[0].template is inst2.template
+
+
+def test_restart_budget_and_backoff_defer_replacements(
+        phi4_runtime_library):
+    """A zero-budget policy leaves detected failures unhealed mid-epoch;
+    a backoff policy restarts them later, not instantly."""
+    region = CORE_REGIONS[0].name
+
+    def make_rt(policy):
+        rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS,
+                            phi4_runtime_library, allocate, WLS,
+                            epoch_s=240.0, health_check_s=10.0,
+                            restart_policy=policy)
+        inst = rt.sim.add_instance(region, DEC[0])
+        rt.running[(region, DEC[0].key)] = [inst]
+        rt.sim.run_until(INIT_DELAY_S + 1.0)
+        return rt, inst
+
+    rt, inst = make_rt(RestartPolicy(budget_per_epoch=0))
+    rt._crash(inst)
+    rt.sim.run_until(rt.sim.now + 3600.0)
+    assert inst.dead and rt._epoch_failed == 1
+    assert rt._epoch_restarted == 0, "budget 0 must block the restart"
+
+    rt, inst = make_rt(RestartPolicy(backoff_base_s=200.0))
+    t_crash = rt.sim.now
+    rt._crash(inst)
+    rt.sim.run_until(t_crash + 100.0)   # probe (10s) fired, backoff not
+    assert inst.dead and rt._epoch_restarted == 0
+    rt.sim.run_until(t_crash + 400.0)
+    assert rt._epoch_restarted == 1
+    repl = [i for i in rt.sim.instances.values() if not i.dead]
+    assert len(repl) == 1
+    assert repl[0].ready_at >= t_crash + 10.0 + 200.0
+
+
+def test_runtime_crash_storm_recovers(phi4_runtime_library):
+    """End-to-end: the hardened runtime detects a correlated burst,
+    restarts within policy, surfaces the recovery in EpochMetrics, and
+    the failure-triggered controller re-solve fires."""
+    n_epochs = 6
+    sc = make_scenario("crash_storm", {MODEL.name: MODEL}, CORE_REGIONS,
+                       CONFIGS, WLS, n_epochs=n_epochs, epoch_s=240.0,
+                       base_rate=1.5, seed=3)
+    rt = ClusterRuntime({MODEL.name: MODEL}, CORE_REGIONS, CONFIGS,
+                        phi4_runtime_library, AllocatorState(), WLS,
+                        epoch_s=sc.epoch_s, health_check_s=15.0,
+                        restart_policy=RestartPolicy(backoff_base_s=20.0,
+                                                     budget_per_epoch=4),
+                        shed_policy=ShedPolicy(32.0))
+    ctrl = ReSolveController(ControllerConfig())
+    res = rt.run(sc.requests, sc.availability, sc.truth_demands,
+                 controller=ctrl, fault_injector=FaultInjector(sc.faults))
+    assert len(res.epochs) == n_epochs
+    assert res.total_failed() > 0
+    assert res.total_restarted() > 0
+    assert res.recovery_epochs() >= 1
+    storm = sc.faults.start_epoch
+    detected = [e.epoch for e in res.epochs if e.n_failed > 0]
+    # detection happens in the storm epoch, or one later if the burst
+    # landed within health_check_s of the epoch edge
+    assert detected and storm <= detected[0] <= storm + 1
+    assert res.epochs[detected[0]].recovering
+    # detection feeds the controller: the epoch after it re-solves with
+    # the dedicated failure trigger
+    assert res.epochs[detected[0] + 1].trigger_reason == "failure"
+    # the cluster comes back: the final epoch serves and is not
+    # flagged as still recovering
+    assert res.epochs[-1].goodput[MODEL.name] > 0
+    assert not res.epochs[-1].recovering
+    assert all(e.alloc_source in ("solved", "fallback", "last_good",
+                                  "kept", "none") for e in res.epochs)
+
+
+def test_runresult_fault_aggregates_guard_empty():
+    r = RunResult()
+    assert r.total_failed() == 0
+    assert r.total_restarted() == 0
+    assert r.total_shed() == 0
+    assert r.recovery_epochs() == 0
+
+
+# --------------------------------------------- solver degradation ladder
+def test_solver_timeout_returns_incumbent_fallback(phi4_runtime_library):
+    """The middle rung of the degradation ladder: a deadline-bounded
+    solve that expires returns the incumbent (Allocation.fallback),
+    preserves AllocatorState for the next epoch, and never raises."""
+    lib = phi4_runtime_library
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    demands = [Demand(MODEL.name, "prefill", 2.0 * WL.avg_prompt),
+               Demand(MODEL.name, "decode", 2.0 * WL.avg_output)]
+    state = AllocatorState()
+    good = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                              lib, time_limit=60.0))
+    assert good.ok and not good.fallback
+    x_before = state._prev_x.copy()
+    # pathologically small deadline: HiGHS expires before any solution
+    tiny = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                              lib, time_limit=1e-9))
+    assert tiny.ok and tiny.fallback
+    assert tiny.instances == good.instances, \
+        "the fallback is the repaired incumbent, not a fresh solve"
+    assert np.array_equal(state._prev_x, x_before), \
+        "state survives the timeout for the next epoch's warm start"
+    # and the ladder's bottom rung: no incumbent at all -> not-ok
+    # allocation with the full demand declared unmet, still no raise
+    fresh = AllocatorState()
+    dead = fresh(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                              lib, time_limit=1e-9))
+    assert not dead.ok and not dead.instances
+    assert set(dead.unmet) == {(MODEL.name, "prefill"),
+                               (MODEL.name, "decode")}
+
+
+def test_solver_crash_is_treated_as_timeout(phi4_runtime_library,
+                                            monkeypatch):
+    """A raising solver backend walks the same ladder as a timeout
+    instead of propagating into the epoch loop."""
+    from repro.solver.milp import MilpModel
+    lib = phi4_runtime_library
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    demands = [Demand(MODEL.name, "prefill", 2.0 * WL.avg_prompt),
+               Demand(MODEL.name, "decode", 2.0 * WL.avg_output)]
+    state = AllocatorState()
+    good = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                              lib, time_limit=60.0))
+    assert good.ok
+
+    def boom(self, **kw):
+        raise RuntimeError("backend crashed")
+
+    monkeypatch.setattr(MilpModel, "solve", boom)
+    alloc = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
+                               demands, lib, time_limit=60.0))
+    assert alloc.ok and alloc.fallback
+    assert alloc.instances == good.instances

@@ -236,6 +236,107 @@ def test_batched_oracle_equivalence():
     assert s2.tokens[m].n_runs < s1.tokens[m].n_runs
 
 
+def _kill_run(batched, *, t_kill, victim_idx, drain_first=False,
+              rate=3.0, seed=11):
+    """One seeded run killing a specific instance at a specific time,
+    used to cross-check kill edge cases batched vs oracle."""
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL},
+                    batched=batched)
+    sim.add_instance("r0", PRE[0], ready_delay=0.0)
+    sim.add_instance("r0", PRE[1], ready_delay=0.0)
+    sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    sim.add_instance("r0", DEC[1], ready_delay=0.0)
+    reqs = gen_requests(MODEL.name, MODEL.trace, rate, 120, seed=seed)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(t_kill)
+    victim = sim.instances[victim_idx]
+    if drain_first:
+        sim.drain_instance(victim)
+    sim.kill_instance(victim)
+    sim.run_until(7200.0)
+    return sim, reqs
+
+
+def _assert_kill_equiv(t_kill, victim_idx, **kw):
+    s1, r1 = _kill_run(False, t_kill=t_kill, victim_idx=victim_idx, **kw)
+    s2, r2 = _kill_run(True, t_kill=t_kill, victim_idx=victim_idx, **kw)
+    m = MODEL.name
+    assert s1.dropped == s2.dropped
+    assert {r.rid for r in s1.finished} == {r.rid for r in s2.finished}
+    fin = {r.rid for r in s1.finished}
+    d1 = {r.rid: (r.finish, r.prefill_done, r.decode_slo_ok,
+                  r.decode_tokens_ok) for r in r1 if r.rid in fin}
+    d2 = {r.rid: (r.finish, r.prefill_done, r.decode_slo_ok,
+                  r.decode_tokens_ok) for r in r2 if r.rid in fin}
+    assert d1 == d2
+    assert s1.goodput(m, 0, 7200) == s2.goodput(m, 0, 7200)
+    return s1, s2, r1
+
+
+# ------------------------------------------------- kill edge cases
+def test_kill_draining_instance():
+    """Killing an instance that is already draining: the drain's
+    finish-in-flight promise is superseded, work re-routes, and both
+    loops agree bit-for-bit."""
+    s1, s2, reqs = _assert_kill_equiv(90.0, 2, drain_first=True)
+    for s in (s1, s2):
+        inst = s.instances[2]
+        assert inst.dead and inst.draining
+        assert not inst.resident and not inst.queue
+        assert s.dropped == 0
+        assert {r.rid for r in s.finished} == {r.rid for r in reqs}
+
+
+def test_kill_prefill_with_admission_queue():
+    """Killing a prefill instance whose admission queue is non-empty:
+    the queued (never-prefilled) requests re-enter via _on_arrival and
+    prefill exactly once, on the surviving instance."""
+    # flood so the strongest prefill instance holds a backlog at t=40
+    s1, s2, reqs = _assert_kill_equiv(40.0, 0, rate=30.0, seed=12)
+    for s in (s1, s2):
+        n_prefilled = len([r for r in reqs if r.prefill_done >= 0])
+        assert len(s.prefill_lat[MODEL.name]) == n_prefilled
+        assert {r.rid for r in s.finished} == {r.rid for r in reqs}
+
+
+def test_kill_prefill_queue_was_nonempty():
+    """The companion probe for the edge above: the victim really held
+    queued work when the kill landed (otherwise the test is vacuous)."""
+    sim2 = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL})
+    sim2.add_instance("r0", PRE[0], ready_delay=0.0)
+    sim2.add_instance("r0", PRE[1], ready_delay=0.0)
+    sim2.add_instance("r0", DEC[0], ready_delay=0.0)
+    sim2.add_instance("r0", DEC[1], ready_delay=0.0)
+    for r in gen_requests(MODEL.name, MODEL.trace, 30.0, 120, seed=12):
+        sim2.submit(r)
+    sim2.run_until(40.0)
+    assert len(sim2.instances[0].queue) > 0
+
+
+def test_kill_exactly_on_span_boundary():
+    """A kill landing exactly on a batched-span iteration boundary
+    counts that iteration as complete — the same accounting the oracle
+    produces when its _decode_done at that instant fires first."""
+    # probe (batched): find a decode span boundary strictly ahead
+    probe = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL},
+                      batched=True)
+    probe.add_instance("r0", PRE[0], ready_delay=0.0)
+    probe.add_instance("r0", PRE[1], ready_delay=0.0)
+    probe.add_instance("r0", DEC[0], ready_delay=0.0)
+    probe.add_instance("r0", DEC[1], ready_delay=0.0)
+    for r in gen_requests(MODEL.name, MODEL.trace, 3.0, 120, seed=11):
+        probe.submit(r)
+    probe.run_until(60.0)
+    victim = probe.instances[2]
+    assert victim.span is not None, "probe expects an in-flight span"
+    ahead = [b for b in victim.span.bounds if b > probe.now + 1e-9]
+    assert ahead, "probe expects future iteration boundaries"
+    t_star = ahead[0]
+    s1, s2, _ = _assert_kill_equiv(t_star, 2)
+    assert s1.instances[2].dead and s2.instances[2].dead
+
+
 def test_tokenruns_window_counts():
     from repro.simulator.sim import TokenRuns
     tr = TokenRuns()

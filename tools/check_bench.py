@@ -85,6 +85,16 @@ def extract_metrics() -> Dict[str, float]:
                 # absolute beat-static (> 1.0) acceptance criterion is
                 # asserted inside benchmarks/control_loop.py itself
                 out[f"control_loop_vs_static_{s}"] = r["goodput_vs_static"]
+    d = _load("BENCH_fault.json")
+    if d:
+        for r in d.get("results", []):
+            s = r["scenario"]
+            # hardened-vs-naive recovery ratios (time-to-recover and
+            # post-fault coverage); the absolute beats-naive criterion
+            # for crash_storm/crash_loop is asserted inside
+            # benchmarks/fault_bench.py itself
+            out[f"fault_recovery_speedup_{s}"] = r["recovery_speedup"]
+            out[f"fault_coverage_ratio_{s}"] = r["coverage_ratio"]
     return out
 
 
@@ -98,6 +108,8 @@ def _metric_file(name: str) -> str:
         return "BENCH_allocator.json"
     if name.startswith("control_loop_"):
         return "BENCH_control_loop.json"
+    if name.startswith("fault_"):
+        return "BENCH_fault.json"
     return ""
 
 

@@ -19,7 +19,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export BENCH_FAST="${BENCH_FAST:-1}"
-CI_BENCH="${CI_BENCH:-table1,template_gen,sim_loop,allocator,control_loop}"
+CI_BENCH="${CI_BENCH:-table1,template_gen,sim_loop,allocator,control_loop,fault}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
