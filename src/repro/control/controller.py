@@ -85,7 +85,9 @@ class ReSolveController:
     def avail_delta(self, availability: Dict[Tuple[str, str], int]) -> float:
         if self._ref_avail is None:
             return 1.0
-        keys = set(availability) | set(self._ref_avail)
+        # sorted: the union's hash order would make the float l1
+        # accumulation (and thus the trigger) PYTHONHASHSEED-dependent
+        keys = sorted(set(availability) | set(self._ref_avail))
         total_ref = sum(self._ref_avail.values())
         l1 = 0.0
         worst_key = 0.0
@@ -206,7 +208,8 @@ class TransitionPlanner:
     def churn_cost(self, target: Dict[Tuple[str, Tuple], int],
                    current: Dict[Tuple[str, Tuple], int]) -> float:
         cost = 0.0
-        for key in set(target) | set(current):
+        # sorted: float accumulation order must not depend on hash seed
+        for key in sorted(set(target) | set(current)):
             tgt = target.get(key, 0)
             cur = current.get(key, 0)
             if tgt == cur:

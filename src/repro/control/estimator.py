@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocator import Demand
+from repro.debug import invariants as _inv
 
 
 @dataclass
@@ -161,4 +162,6 @@ class DemandEstimator:
                               r * st.prompt_mean + st.pre_backlog / drain))
             out.append(Demand(m, "decode",
                               r * st.out_mean + st.dec_backlog / drain))
+        if _inv.sanitize_enabled():
+            _inv.check_demands(out)
         return out

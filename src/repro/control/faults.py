@@ -111,6 +111,7 @@ class FaultInjector:
         # observability: (t, kind, instance id) of every planned fault
         self.events: List[Tuple[float, str, int]] = []
         self.first_fault_t: Optional[float] = None
+        self._epoch = 0                 # advanced by plan_epoch
 
     # ------------------------------------------------------ stale feed
     def observed_availability(self, epoch: int, true_avail: Dict) -> Dict:
@@ -139,6 +140,7 @@ class FaultInjector:
         sorted by time.  Crashing an already-failed instance is a no-op
         downstream, so overlapping processes compose safely."""
         cfg = self.cfg
+        self._epoch = epoch     # restart_outcome gates on the window
         if not cfg.start_epoch <= epoch < cfg.stop_epoch:
             return []
         rng = self._rng_plan
@@ -181,8 +183,14 @@ class FaultInjector:
     def restart_outcome(self) -> Optional[float]:
         """Flaky-restart draw for one replacement: ``None`` when it
         comes up healthy, else the post-ready delay after which it
-        crashes again."""
+        crashes again.  Gated on the fault window: flaky restarts model
+        a correlated cause (bad image, failing rack) that clears when
+        the fault process stops, so once the window closes the tail
+        measures recovery discipline — not an unbounded crash loop
+        that no discipline could ever win."""
         cfg = self.cfg
+        if not cfg.start_epoch <= self._epoch < cfg.stop_epoch:
+            return None
         if cfg.restart_flake_p > 0.0 \
                 and self._rng_restart.random() < cfg.restart_flake_p:
             return cfg.flake_after_s * (0.5 + self._rng_restart.random())

@@ -21,6 +21,7 @@ no longer fit (ShuntServe's stress case).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
@@ -134,7 +135,7 @@ def _storm_availability(regions, configs, n_epochs: int,
     families = sorted({(r.name, c.device.name) for r in regions
                        for c in configs})
     cfg_of = {d: [c.name for c in configs if c.device.name == d]
-              for d in {c.device.name for c in configs}}
+              for d in sorted({c.device.name for c in configs})}
 
     def _apply(rname, dev, e):
         d = rng.uniform(*depth)
@@ -168,7 +169,7 @@ def _outage_availability(regions, configs, n_epochs: int,
     allocator concentrates capacity) loses all supply mid-run."""
     flat = _flat_supply(regions, configs, base)
     out = [dict(flat) for _ in range(n_epochs)]
-    devices = {c.device.name for c in configs}
+    devices = sorted({c.device.name for c in configs})
     victim = min(sorted(regions, key=lambda r: r.name),
                  key=lambda r: sum(r.price_mult.get(d, 1.0)
                                    for d in devices)).name
@@ -188,7 +189,11 @@ def _fault_config(name: str, n_epochs: int, epoch_s: float,
     for the stale feed, which lies for the whole run) closes again so
     the tail measures recovery, not steady-state attrition."""
     start = max(n_epochs // 3, 1)
-    fseed = seed * 7919 + 31 * len(name)
+    # stable full-name hash: len(name) collided for same-length
+    # scenario names (crash_loop/stale_feed), giving them identical
+    # fault-plan RNG streams; the "fault:" prefix keeps this stream
+    # distinct from make_scenario's workload rng for the same name
+    fseed = seed * 7919 + zlib.crc32(f"fault:{name}".encode())
     if name == "crash_storm":
         # one correlated (region, device-family) burst, plus light
         # independent attrition while the window is open
@@ -223,7 +228,9 @@ def make_scenario(name: str, models: Dict, regions: Sequence,
                   seed: int = 0) -> Scenario:
     """Build one named scenario over the given (models, regions,
     configs) universe.  Deterministic in ``seed``."""
-    rng = np.random.default_rng(seed * 7919 + len(name))
+    # stable full-name hash: the old len(name) term seeded same-length
+    # scenario names (flash_crowd/crash_storm) with identical streams
+    rng = np.random.default_rng(seed * 7919 + zlib.crc32(name.encode()))
     rates, meta = _rate_schedules(name, list(models), n_epochs,
                                   base_rate, rng)
     base = default_base_availability(configs, abundance=abundance)

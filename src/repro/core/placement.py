@@ -193,7 +193,8 @@ def _partitions_by_shape(shape: Tuple[int, ...]):
     for part in _multiset_partitions(items):
         row = []
         for g in part:
-            key = tuple(sorted((lbl, g.count(lbl)) for lbl in set(g)))
+            key = tuple(sorted((lbl, g.count(lbl))
+                               for lbl in sorted(set(g))))
             gid = cg_index.get(key)
             if gid is None:
                 gid = cg_index[key] = len(cgroups)

@@ -495,6 +495,7 @@ def generate_templates(model: ServedModel, phase: str,
     asserts the two template sets are identical (keys and bit-exact
     throughputs); ``stats["cross_check"] == "ok"`` records the proof.
     """
+    # corallint: disable=D1 - generation-stats telemetry only
     t0 = time.time()
     slo_ms = model.prefill_slo_ms if phase == "prefill" else model.decode_slo_ms
     pt = ProfileTable(model, phase, slo_ms, wl)
@@ -512,6 +513,7 @@ def generate_templates(model: ServedModel, phase: str,
 
     def _stats(n_combos, n_raw, n_temps, extra=None):
         s = {"combos": n_combos, "templates_raw": n_raw,
+             # corallint: disable=D1 - telemetry only
              "templates": n_temps, "seconds": time.time() - t0,
              "n_max": n_max, "rho": rho,
              "fingerprint": generation_fingerprint(

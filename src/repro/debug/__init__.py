@@ -1,0 +1,6 @@
+"""Debug-only runtime instrumentation.
+
+``repro.debug.invariants`` is the CORAL_SANITIZE=1 invariant sanitizer
+(tools/README.md "corallint + sanitizer"); nothing in here runs unless
+that flag is set, so importing this package is always cheap.
+"""

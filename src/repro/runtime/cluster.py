@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import AllocProblem, Allocation, Demand
 from repro.core.hardware import NodeConfig, Region
+from repro.debug import invariants as _inv
 from repro.core.modelspec import ServedModel
 from repro.core.templates import TemplateLibrary
 from repro.simulator.sim import INIT_DELAY_S, SimInstance, Simulator
@@ -444,6 +445,8 @@ class ClusterRuntime:
                 demands = estimator.estimate(horizon_s=self.epoch_s)
             else:
                 demands = demands_per_epoch[e]
+            if _inv.sanitize_enabled():
+                _inv.check_demands(demands)
             true_avail = dict(availability_per_epoch[e])
             n_preempted = 0
             if self.spot_market:
@@ -515,6 +518,13 @@ class ClusterRuntime:
                     # out returns the incumbent (Allocation.fallback)
                     alloc_source = "fallback" if solver_failed \
                         else "solved"
+                    if alloc_source == "solved" \
+                            and _inv.sanitize_enabled():
+                        # a fresh solve must fit the availability it
+                        # saw; kept/fallback targets may legitimately
+                        # overshoot a shrunken market (reconcile caps
+                        # them), so only "solved" is checked
+                        _inv.check_allocation(alloc, avail)
                     self._last_alloc = alloc
                     # a fallback (failed-HiGHS) result is a usable
                     # target but NOT a solve: the controller's drift
@@ -557,6 +567,13 @@ class ClusterRuntime:
                         self.sim.ev.push(f.t, self.sim.degrade_instance,
                                          f.inst, f.factor, f.duration_s)
             self.sim.run_until(t1)
+            if _inv.sanitize_enabled():
+                pol = self.restart_policy
+                if pol is None or pol.check_availability:
+                    # a restart policy that skips availability checks
+                    # deliberately over-holds; everyone else must fit
+                    # the epoch's physical supply
+                    _inv.check_holdings(self._held_nodes(), rec_avail)
             if estimator is not None:
                 estimator.observe(self.sim, t0, t1)
             n_new += self._epoch_new
@@ -569,7 +586,7 @@ class ClusterRuntime:
                 live = [i for i in insts if not i.dead]
                 for inst in live:
                     cost += inst.template.cost(region, cfg)
-            result.epochs.append(EpochMetrics(
+            em = EpochMetrics(
                 epoch=e, cost_per_hour=cost + init_cost, init_cost=init_cost,
                 goodput={m: self.sim.goodput(m, t0, t1) for m in self.models},
                 throughput={m: self.sim.throughput(m, t0, t1)
@@ -588,5 +605,8 @@ class ClusterRuntime:
                             or self._epoch_restarted > 0
                             or any(i.failed and not i.dead
                                    for i in self.sim.instances.values())),
-                alloc_source=alloc_source))
+                alloc_source=alloc_source)
+            if _inv.sanitize_enabled():
+                _inv.check_epoch_metrics(em)
+            result.epochs.append(em)
         return result

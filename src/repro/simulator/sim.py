@@ -58,6 +58,7 @@ import numpy as np
 from repro.core.hardware import NodeConfig, Region
 from repro.core.modelspec import ServedModel
 from repro.core.templates import ServingTemplate
+from repro.debug import invariants as _inv
 from repro.simulator.costmodel import InstanceCostModel
 from repro.traces.workloads import Request
 
@@ -186,8 +187,8 @@ class _ObsLog:
         self._o: List[int] = []
         self._np = None
         self.n_total = 0
-        self.prompt_total = 0.0
-        self.output_total = 0.0
+        self.prompt_total = 0
+        self.output_total = 0
 
     def add(self, t: float, prompt: int, output: int):
         self._t.append(t)
@@ -345,6 +346,9 @@ class Simulator:
         self.shed_policy: Optional[ShedPolicy] = None
         self.shed: int = 0                      # cumulative shed arrivals
         self.shed_by_model: Dict[str, int] = {m: 0 for m in models}
+        self.dropped_by_model: Dict[str, int] = {m: 0 for m in models}
+        # CORAL_SANITIZE=1: runtime invariant checks (repro.debug)
+        self._san = _inv.SimSanitizer() if _inv.sanitize_enabled() else None
         # router knows per-node degradation (health telemetry); the
         # naive runtime of benchmarks/fault_bench.py turns this off
         self.straggler_aware = True
@@ -611,6 +615,8 @@ class Simulator:
             t = self._earliest_ready(req.model, "prefill")
             if t is None:
                 self.dropped += 1
+                self.dropped_by_model[req.model] = \
+                    self.dropped_by_model.get(req.model, 0) + 1
             else:
                 self.ev.push(t, self._on_arrival, req)
             return
@@ -691,6 +697,8 @@ class Simulator:
                 t = self._earliest_ready(r.model, "decode")
                 if t is None:
                     self.dropped += 1
+                    self.dropped_by_model[r.model] = \
+                        self.dropped_by_model.get(r.model, 0) + 1
                 else:           # decode pool still initializing: hold
                     self.ev.push(max(t, self.now + delay),
                                  self._dispatch_decode, r)
@@ -858,6 +866,8 @@ class Simulator:
         everything still resident is untouched."""
         if n <= 0:
             return
+        if self._san is not None:
+            self._san.check_settle(self, inst, sp, n)
         bounds = sp.bounds
         runs = self.tokens[inst.template.model]
         ok_gain = 0
@@ -962,6 +972,8 @@ class Simulator:
         t = self._earliest_ready(req.model, "decode")
         if t is None:
             self.dropped += 1
+            self.dropped_by_model[req.model] = \
+                self.dropped_by_model.get(req.model, 0) + 1
         else:
             self.ev.push(t, self._dispatch_decode, req)
 
@@ -1032,11 +1044,16 @@ class Simulator:
     # ---------------------------------------------------------------- run
     def run_until(self, t_end: float):
         self.horizon = t_end
+        san = self._san
         while self.ev and self.ev._q[0][0] <= t_end:
             t, _, fn, args = self.ev.pop()
+            if san is not None:
+                san.note_pop(t, self.now)
             self.now = max(self.now, t)
             fn(*args)
         self.now = t_end
+        if san is not None:
+            san.check_sim(self)
 
     def pool_backlog(self, model: str, phase: str) -> Tuple[int, int]:
         """Queue snapshot over a pool's live instances: (queued requests,

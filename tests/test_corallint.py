@@ -1,0 +1,179 @@
+"""corallint unit tests: positive/negative fixtures per rule,
+suppression semantics, and the baseline round-trip (tools/corallint)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.corallint import (ALL_CHECKERS, AccountingChecker,  # noqa: E402
+                             DeterminismChecker, HygieneChecker,
+                             LifecycleChecker, SolverChecker, lint_source,
+                             load_baseline, save_baseline,
+                             split_by_baseline)
+
+SIM_PATH = "src/repro/simulator/sim.py"         # D1-critical, L1 home
+CTRL_PATH = "src/repro/control/controller.py"   # D1- and S1-critical
+
+
+def _rules(src, path, checkers=ALL_CHECKERS):
+    return [f.rule for f in lint_source(src, path, checkers)]
+
+
+# ------------------------------------------------------------------- D1
+def test_d1_flags_wallclock_in_critical_dirs():
+    src = "import time\nt = time.time()\n"
+    assert _rules(src, SIM_PATH, [DeterminismChecker]) == ["D1"]
+
+
+def test_d1_ignores_wallclock_outside_critical_dirs():
+    src = "import time\nt = time.time()\n"
+    assert _rules(src, "benchmarks/run.py", [DeterminismChecker]) == []
+
+
+def test_d1_flags_unseeded_rng_and_set_iteration():
+    src = ("import numpy as np\n"
+           "rng = np.random.default_rng()\n"
+           "for x in {1, 2, 3}:\n"
+           "    heappush(q, x)\n")
+    rules = _rules(src, CTRL_PATH, [DeterminismChecker])
+    assert rules.count("D1") == 2
+
+
+def test_d1_sorted_set_iteration_is_clean():
+    src = ("for x in sorted({1, 2, 3}):\n"
+           "    heappush(q, x)\n")
+    assert _rules(src, CTRL_PATH, [DeterminismChecker]) == []
+
+
+# ------------------------------------------------------------------- L1
+def test_l1_flags_state_write_outside_sanctioned_methods():
+    src = ("class Router:\n"
+           "    def reroute(self, inst):\n"
+           "        inst.dead = True\n")
+    assert _rules(src, CTRL_PATH, [LifecycleChecker]) == ["L1"]
+
+
+def test_l1_allows_sanctioned_transitions_in_sim():
+    src = ("class Simulator:\n"
+           "    def kill_instance(self, inst):\n"
+           "        inst.dead = True\n"
+           "    def __init__(self):\n"
+           "        self.dead = False\n")
+    assert _rules(src, SIM_PATH, [LifecycleChecker]) == []
+
+
+# ------------------------------------------------------------------- A1
+def test_a1_flags_float_accumulation_into_counter():
+    src = "tokens_total += 0.5\n"
+    assert _rules(src, SIM_PATH, [AccountingChecker]) == ["A1"]
+
+
+def test_a1_flags_float_initialized_class_counter():
+    src = ("class Log:\n"
+           "    def __init__(self):\n"
+           "        self.n_total = 0.0\n"
+           "    def add(self):\n"
+           "        self.n_total += 1\n")
+    assert _rules(src, SIM_PATH, [AccountingChecker]) == ["A1"]
+
+
+def test_a1_flags_rate_total_mixing():
+    src = "x = tokens_per_s + tokens_out\n"
+    assert _rules(src, SIM_PATH, [AccountingChecker]) == ["A1"]
+
+
+def test_a1_ignores_float_cost_totals():
+    src = ("total_cost += 0.25\n"
+           "class M:\n"
+           "    def __init__(self):\n"
+           "        self.solve_seconds_total = 0.0\n"
+           "    def add(self, s):\n"
+           "        self.solve_seconds_total += s\n")
+    assert _rules(src, SIM_PATH, [AccountingChecker]) == []
+
+
+# ------------------------------------------------------------------- S1
+def test_s1_flags_per_var_api_in_loop_on_epoch_paths():
+    src = ("for d in demands:\n"
+           "    mdl.add_constr([1.0], lb=0.0)\n")
+    assert _rules(src, "src/repro/core/allocator.py",
+                  [SolverChecker]) == ["S1"]
+
+
+def test_s1_allows_per_var_api_off_epoch_paths():
+    src = ("for d in demands:\n"
+           "    mdl.add_constr([1.0], lb=0.0)\n")
+    assert _rules(src, "src/repro/core/placement.py", [SolverChecker]) == []
+
+
+def test_s1_flags_static_coo_shape_mismatch():
+    src = "mdl.add_constrs_coo([1.0, 2.0], [0, 0, 1], [0, 1])\n"
+    assert _rules(src, "tests/test_solver.py", [SolverChecker]) == ["S1"]
+
+
+# ------------------------------------------------------------------- P1
+def test_p1_flags_mutable_defaults():
+    src = ("def f(xs=[]):\n"
+           "    return xs\n"
+           "@dataclass\n"
+           "class C:\n"
+           "    ys: list = []\n")
+    rules = _rules(src, "src/repro/core/templates.py", [HygieneChecker])
+    assert rules.count("P1") == 2
+
+
+def test_p1_clean_defaults_pass():
+    src = ("def f(xs=None, n=3, s='a'):\n"
+           "    return xs or []\n")
+    assert _rules(src, "src/repro/core/templates.py",
+                  [HygieneChecker]) == []
+
+
+# ---------------------------------------------------------- suppressions
+def test_trailing_suppression_covers_own_line():
+    src = "import time\nt = time.time()  # corallint: disable=D1 - why\n"
+    assert _rules(src, SIM_PATH, [DeterminismChecker]) == []
+
+
+def test_standalone_suppression_covers_next_line_only():
+    src = ("import time\n"
+           "# corallint: disable=D1 - telemetry\n"
+           "t = time.time()\n"
+           "u = time.time()\n")
+    assert _rules(src, SIM_PATH, [DeterminismChecker]) == ["D1"]
+
+
+def test_suppression_is_rule_specific():
+    src = "import time\nt = time.time()  # corallint: disable=A1\n"
+    assert _rules(src, SIM_PATH, [DeterminismChecker]) == ["D1"]
+
+
+# -------------------------------------------------------------- baseline
+def test_baseline_round_trip(tmp_path):
+    src = "import time\nt = time.time()\n"
+    findings = lint_source(src, SIM_PATH, [DeterminismChecker])
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    save_baseline(path, findings)
+    keys = load_baseline(path)
+    assert keys == sorted({f.key for f in findings})
+    new, accepted, stale = split_by_baseline(findings, keys)
+    assert new == [] and accepted == findings and stale == []
+    # an empty fresh run leaves the old keys stale
+    new, accepted, stale = split_by_baseline([], keys)
+    assert new == [] and accepted == [] and stale == keys
+
+
+def test_repo_lints_clean_against_committed_baseline():
+    """The acceptance criterion: the tree has zero unsuppressed,
+    un-baselined findings."""
+    from tools.corallint.base import lint_paths
+    baseline = load_baseline(str(ROOT / "tools" / "corallint"
+                                 / "baseline.json"))
+    findings = lint_paths(["src", "tests", "benchmarks"], str(ROOT),
+                          ALL_CHECKERS)
+    new, _accepted, _stale = split_by_baseline(findings, baseline)
+    assert new == [], [f"{f.rule}:{f.path}:{f.line} {f.message}"
+                       for f in new]

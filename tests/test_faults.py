@@ -67,9 +67,10 @@ def test_injector_window_and_liveness_filters():
     cfg = FaultConfig(seed=0, crash_rate=1.0, start_epoch=2, stop_epoch=3)
     inj = FaultInjector(cfg)
     insts = [_stub(i) for i in range(4)]
+    # corallint: disable=L1 - stub topology setup on SimpleNamespace
     insts[1].dead = True
-    insts[2].draining = True
-    insts[3].failed = True
+    insts[2].draining = True    # corallint: disable=L1 - stub setup
+    insts[3].failed = True      # corallint: disable=L1 - stub setup
     assert inj.plan_epoch(0, 0.0, 240.0, insts) == []
     assert inj.plan_epoch(1, 240.0, 240.0, insts) == []
     ev = inj.plan_epoch(2, 480.0, 240.0, insts)

@@ -1,0 +1,176 @@
+"""CORAL_SANITIZE=1 invariant sanitizer (repro.debug.invariants): a
+clean run stays silent; broken conservation laws, forbidden lifecycle
+transitions, and out-of-budget allocations raise InvariantViolation."""
+import pytest
+
+from repro.core.hardware import make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import generate_templates
+from repro.debug import invariants as inv
+from repro.debug.invariants import InvariantViolation
+from repro.simulator.sim import Simulator
+from repro.traces.workloads import gen_requests, workload_stats
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+CFG_BY_NAME = {c.name: c for c in CONFIGS}
+
+PRE, _ = generate_templates(MODEL, "prefill", CONFIGS, WL, n_max=2, rho=8.0)
+DEC, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=2, rho=8.0)
+PRE.sort(key=lambda t: -t.throughput)
+DEC.sort(key=lambda t: -t.throughput)
+
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv("CORAL_SANITIZE", "1")
+
+
+def _run_sim(duration=60.0, rate=1.0, seed=0):
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL},
+                    batched=True)
+    sim.add_instance("r0", PRE[0], ready_delay=0.0)
+    sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    for r in gen_requests(MODEL.name, MODEL.trace, rate=rate,
+                          duration=duration, seed=seed):
+        sim.submit(r)
+    sim.run_until(3600.0)
+    return sim
+
+
+def test_flag_gates_the_sanitizer(monkeypatch):
+    monkeypatch.delenv("CORAL_SANITIZE", raising=False)
+    assert not inv.sanitize_enabled()
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL})
+    assert sim._san is None
+    monkeypatch.setenv("CORAL_SANITIZE", "0")
+    assert not inv.sanitize_enabled()
+    monkeypatch.setenv("CORAL_SANITIZE", "1")
+    assert inv.sanitize_enabled()
+
+
+def test_clean_run_is_silent(sanitized):
+    sim = _run_sim()
+    assert sim._san is not None
+    assert len(sim.finished) > 0          # the run did real work
+    sim._san.check_sim(sim)               # and re-auditing it is silent
+
+
+def test_catches_broken_token_conservation(sanitized):
+    sim = _run_sim()
+    inst = next(i for i in sim.instances.values()
+                if i.phase == "decode")
+    inst.tokens_out += 5                  # cook the books
+    with pytest.raises(InvariantViolation, match="token conservation"):
+        sim._san.check_sim(sim)
+
+
+def test_catches_broken_request_conservation(sanitized):
+    sim = _run_sim()
+    sim.finished.pop()                    # lose a finished request
+    with pytest.raises(InvariantViolation, match="request conservation"):
+        sim._san.check_sim(sim)
+
+
+def test_catches_resurrected_instance(sanitized):
+    sim = _run_sim(duration=20.0)
+    victim = next(i for i in sim.instances.values()
+                  if i.phase == "decode")
+    sim.kill_instance(victim)
+    sim.run_until(3700.0)                 # records the death
+    # forbidden transition: dead instances never come back
+    victim.dead = False     # corallint: disable=L1 - deliberate breakage
+    with pytest.raises(InvariantViolation, match="resurrected"):
+        sim._san.check_sim(sim)
+
+
+def test_catches_dead_instance_left_routable(sanitized):
+    sim = _run_sim(duration=20.0)
+    inst = next(i for i in sim.instances.values()
+                if i.phase == "prefill")
+    inst.dead = True        # corallint: disable=L1 - deliberate breakage
+    with pytest.raises(InvariantViolation, match="routable"):
+        sim._san.check_sim(sim)
+
+
+def test_catches_occupancy_overflow(sanitized):
+    sim = _run_sim(duration=20.0)
+    inst = next(i for i in sim.instances.values()
+                if i.phase == "decode")
+    cap = inst.cm.decode_capacity
+    pad = cap + 1 - len(inst.resident)
+    inst.resident += [(10**9, None, 0, 0)] * pad
+    inst.res_keys += [10**9] * pad
+    with pytest.raises(InvariantViolation, match="decode_capacity"):
+        sim._san.check_sim(sim)
+
+
+def test_heap_time_monotonicity():
+    san = inv.SimSanitizer()
+    san.note_pop(5.0, 4.0)                # future event: fine
+    with pytest.raises(InvariantViolation, match="went backwards"):
+        san.note_pop(3.0, 4.0)            # behind the clock: not fine
+
+
+# ------------------------------------------------------- control plane
+class _Demand:
+    def __init__(self, tps):
+        self.model, self.phase, self.tokens_per_s = "m", "decode", tps
+
+
+def test_check_demands():
+    inv.check_demands([_Demand(0.0), _Demand(123.4)])
+    with pytest.raises(InvariantViolation):
+        inv.check_demands([_Demand(-1.0)])
+    with pytest.raises(InvariantViolation):
+        inv.check_demands([_Demand(float("nan"))])
+
+
+class _Tmpl:
+    def __init__(self, counts):
+        self.counts = counts
+
+
+class _Alloc:
+    def __init__(self, instances, templates):
+        self.instances, self.templates = instances, templates
+
+
+def test_check_allocation_against_availability():
+    alloc = _Alloc({("r0", "k"): 2}, {"k": _Tmpl((("L4x1", 2),))})
+    inv.check_allocation(alloc, {("r0", "L4x1"): 4})
+    with pytest.raises(InvariantViolation, match="available"):
+        inv.check_allocation(alloc, {("r0", "L4x1"): 3})
+    with pytest.raises(InvariantViolation, match="non-negative"):
+        inv.check_allocation(_Alloc({("r0", "k"): -1}, {}), {})
+
+
+def test_check_holdings():
+    inv.check_holdings({("r0", "L4x1"): 2}, {("r0", "L4x1"): 2})
+    with pytest.raises(InvariantViolation, match="physical supply"):
+        inv.check_holdings({("r0", "L4x1"): 3}, {("r0", "L4x1"): 2})
+
+
+class _Metrics:
+    epoch = 0
+    cost_per_hour = 1.0
+    init_cost = 0.0
+    solve_seconds = 0.1
+    n_instances = n_new = n_drained = 0
+    n_preempted = n_failed = n_restarted = n_shed = 0
+    goodput = {"m": 5.0}
+    throughput = {"m": 6.0}
+    unmet = {}
+
+
+def test_check_epoch_metrics():
+    inv.check_epoch_metrics(_Metrics())
+    bad = _Metrics()
+    bad.goodput = {"m": 7.0}              # goodput above throughput
+    with pytest.raises(InvariantViolation, match="exceeds throughput"):
+        inv.check_epoch_metrics(bad)
+    worse = _Metrics()
+    worse.n_shed = -1
+    with pytest.raises(InvariantViolation, match="n_shed"):
+        inv.check_epoch_metrics(worse)

@@ -1,0 +1,3 @@
+"""Operational tooling for the repo: CI entry points, the benchmark
+regression gate (``check_bench``) and the repo-specific static-analysis
+suite (``corallint``)."""

@@ -21,12 +21,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export BENCH_FAST="${BENCH_FAST:-1}"
 CI_BENCH="${CI_BENCH:-table1,template_gen,sim_loop,allocator,control_loop,fault}"
 
+echo "== corallint =="
+# repo-specific static analysis (tools/corallint): fails on any finding
+# not in the committed baseline (tools/corallint/baseline.json)
+python -m tools.corallint --json artifacts/corallint.json src tests benchmarks
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
 if [[ "${1:-}" == "--tests-only" ]]; then
     exit 0
 fi
+
+echo "== sanitize smoke (CORAL_SANITIZE=1, batched vs oracle) =="
+# runtime invariant sanitizer over the control scenarios + crash_storm,
+# asserting the span-batched loop stays bit-identical to the oracle
+CORAL_SANITIZE=1 python tools/sanitize_smoke.py
 
 echo "== bench smoke (${CI_BENCH}) =="
 python benchmarks/run.py --only "${CI_BENCH}"

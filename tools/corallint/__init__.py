@@ -1,0 +1,36 @@
+"""corallint — the repo-specific static-analysis suite.
+
+Rules:
+
+* **D1** determinism (unseeded entropy / hash-order iteration in
+  ``src/repro/{simulator,control,core,solver}``)
+* **L1** instance lifecycle (state-field writes outside the sanctioned
+  ``sim.py`` transition methods)
+* **A1** accounting (float accumulation into token/request counters,
+  tokens-vs-tokens/s mixing via the ``_per_s`` convention)
+* **S1** solver misuse (per-variable model API in loops, static COO
+  triplet shape mismatches)
+* **P1** hygiene (mutable default args / dataclass field defaults)
+
+Run ``python -m tools.corallint src tests benchmarks`` from the repo
+root; see ``tools/README.md`` for the suppression and baseline
+workflow, and ``tests/test_corallint.py`` for per-rule fixtures.
+"""
+from .accounting import AccountingChecker
+from .base import (Checker, FileContext, Finding, iter_py_files,
+                   lint_paths, lint_source, load_baseline, save_baseline,
+                   split_by_baseline)
+from .determinism import DeterminismChecker
+from .hygiene import HygieneChecker
+from .lifecycle import LifecycleChecker
+from .solvercheck import SolverChecker
+
+ALL_CHECKERS = (DeterminismChecker, LifecycleChecker, AccountingChecker,
+                SolverChecker, HygieneChecker)
+
+__all__ = [
+    "ALL_CHECKERS", "AccountingChecker", "Checker", "DeterminismChecker",
+    "FileContext", "Finding", "HygieneChecker", "LifecycleChecker",
+    "SolverChecker", "iter_py_files", "lint_paths", "lint_source",
+    "load_baseline", "save_baseline", "split_by_baseline",
+]

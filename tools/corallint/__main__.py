@@ -1,0 +1,93 @@
+"""corallint driver.
+
+    python -m tools.corallint [paths...] [--json PATH] [--write-baseline]
+
+Paths default to ``src tests benchmarks`` relative to the repo root.
+Exit status is non-zero when findings exist that the committed baseline
+(``tools/corallint/baseline.json``) does not accept.  ``--json`` writes
+a machine-readable summary (mirroring ``check_bench.py --json``):
+``{"counts": {...}, "findings": [...], "new": [...], "stale_baseline":
+[...], "pass": bool}``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import (ALL_CHECKERS, lint_paths, load_baseline, save_baseline,
+               split_by_baseline)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.json")
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.corallint")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories to lint (repo-relative; "
+                         "default: src tests benchmarks)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a machine-readable summary "
+                         "('-' for stdout)")
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="baseline file (default: the committed one)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings into the baseline")
+    args = ap.parse_args(argv)
+
+    findings = lint_paths(args.paths, ROOT, ALL_CHECKERS)
+    if args.write_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"baseline written: {len(findings)} finding(s) -> "
+              f"{os.path.relpath(args.baseline, ROOT)}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, accepted, stale = split_by_baseline(findings, baseline)
+
+    for f in new:
+        print(f.format())
+    if accepted:
+        print(f"({len(accepted)} finding(s) accepted by baseline)")
+    if stale:
+        print(f"note: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} no longer observed: "
+              + ", ".join(stale))
+
+    ok = not new
+    if args.json:
+        counts = {}
+        for f in findings:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        summary = {
+            "counts": counts,
+            "findings": [f.format() for f in findings],
+            "new": [f.format() for f in new],
+            "stale_baseline": stale,
+            "pass": ok,
+        }
+        text = json.dumps(summary, indent=1)
+        if args.json == "-":
+            print(text)
+        else:
+            d = os.path.dirname(os.path.abspath(args.json))
+            os.makedirs(d, exist_ok=True)
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(text + "\n")
+    if ok:
+        n = len(findings)
+        print(f"corallint: OK ({n} accepted finding(s))" if n
+              else "corallint: OK (0 findings)")
+        return 0
+    print(f"corallint: {len(new)} new finding(s) not in baseline",
+          file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

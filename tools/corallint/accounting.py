@@ -1,0 +1,116 @@
+"""A1 — accounting: token/request counters are exact integers (the
+bit-identical batched-vs-oracle claims compare them with ``==``), and
+token *totals* must never mix with token *rates*.
+
+Flags:
+
+* ``+=`` into a counter-named target with an evidently-float RHS
+  (float literal, division, ``float()`` call);
+* counters initialized as float literals (``self.x_total = 0.0``) and
+  then ``+=``-accumulated anywhere in the class — an int counter
+  accumulating through a float drifts once past 2**53 and breaks exact
+  equality long before that under reordering;
+* ``+``/``-`` arithmetic directly mixing a ``*_per_s`` rate name with a
+  token-count name (the lightweight naming convention: rates carry a
+  ``_per_s`` suffix, totals never do).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional, Set
+
+from .base import Checker
+
+COUNTER_RE = re.compile(
+    r"token|(^|_)(count|counts|total|dropped|shed|arrived|finished|"
+    r"iters|n_req)($|_)")
+# money/time/score totals are legitimately float — not request counters
+NOT_COUNTER_RE = re.compile(r"cost|price|weight|score|seconds|secs|rate")
+
+
+def _term_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_counter(name: Optional[str]) -> bool:
+    return bool(name) and bool(COUNTER_RE.search(name)) \
+        and not NOT_COUNTER_RE.search(name) \
+        and not name.endswith("per_s")
+
+
+def _is_floaty(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.Div):
+            return True
+        return _is_floaty(node.left) or _is_floaty(node.right)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id == "float"
+    if isinstance(node, ast.UnaryOp):
+        return _is_floaty(node.operand)
+    return False
+
+
+class AccountingChecker(Checker):
+    rule = "A1"
+    description = "float accumulation into token/request counters or " \
+                  "tokens-vs-tokens/s mixing"
+
+    # ------------------------------------------------- float +=
+    def visit_AugAssign(self, node: ast.AugAssign):
+        if isinstance(node.op, ast.Add):
+            name = _term_name(node.target)
+            if _is_counter(name) and _is_floaty(node.value):
+                self.report(node, f"float += into counter '{name}' — "
+                                  "token/request counters are exact "
+                                  "ints")
+        self.generic_visit(node)
+
+    # ------------------------------- float-initialized class counters
+    def visit_ClassDef(self, node: ast.ClassDef):
+        float_counters: Set[str] = set()
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and item.name == "__init__":
+                for sub in ast.walk(item):
+                    if isinstance(sub, ast.Assign) \
+                            and isinstance(sub.value, ast.Constant) \
+                            and isinstance(sub.value.value, float):
+                        for tgt in sub.targets:
+                            if isinstance(tgt, ast.Attribute) \
+                                    and isinstance(tgt.value, ast.Name) \
+                                    and tgt.value.id == "self" \
+                                    and _is_counter(tgt.attr):
+                                float_counters.add(tgt.attr)
+        if float_counters:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.AugAssign) \
+                        and isinstance(sub.op, ast.Add) \
+                        and isinstance(sub.target, ast.Attribute) \
+                        and sub.target.attr in float_counters:
+                    self.report(
+                        sub, f"counter '{sub.target.attr}' is "
+                             "initialized as a float literal and "
+                             "+=-accumulated — initialize it as int "
+                             "for exact accounting")
+        self.generic_visit(node)
+
+    # -------------------------------------------- rate/total mixing
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            ln, rn = _term_name(node.left), _term_name(node.right)
+            sides = [(ln, rn), (rn, ln)]
+            for a, b in sides:
+                if a and a.endswith("per_s") and b and "token" in b \
+                        and not b.endswith("per_s"):
+                    self.report(
+                        node, f"mixing rate '{a}' (tokens/s) with "
+                              f"total '{b}' (tokens) in +/- arithmetic")
+                    break
+        self.generic_visit(node)

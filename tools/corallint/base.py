@@ -1,0 +1,193 @@
+"""corallint core: findings, suppression pragmas, the checker registry
+and the committed-baseline workflow.
+
+Every checker is a small ``ast.NodeVisitor`` with a rule ID (``D1``,
+``L1``, ``A1``, ``S1``, ``P1``).  A finding is suppressed by a
+``# corallint: disable=RULE[,RULE...]`` comment either trailing the
+statement's first physical line or standing alone on the line above it
+— always with a justification after the rule list, e.g.::
+
+    t0 = time.time()   # corallint: disable=D1 - telemetry only
+
+The committed baseline (``tools/corallint/baseline.json``) lists
+accepted findings by ``rule:path`` key; the driver fails only on
+findings *not* in the baseline, so the enforced repo state is "zero
+new findings" (and the committed baseline is kept empty — true
+positives get fixed, false positives get inline suppressions).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+SUPPRESS_RE = re.compile(
+    r"#\s*corallint:\s*disable=([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                   # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline identity: stable across unrelated edits (no line
+        number — a baseline entry accepts the rule for the whole file,
+        which is why the committed baseline stays empty instead)."""
+        return f"{self.rule}:{self.path}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"{self.rule} {self.message}"
+
+
+class FileContext:
+    """One parsed file handed to every checker."""
+
+    def __init__(self, relpath: str, source: str,
+                 tree: Optional[ast.AST] = None):
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.tree = tree if tree is not None \
+            else ast.parse(source, filename=relpath)
+        self.lines = source.splitlines()
+        self.suppressions = parse_suppressions(self.lines)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return rule in self.suppressions.get(line, ())
+
+
+def parse_suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> suppressed rule IDs.  A trailing
+    pragma covers its own line; a standalone comment line covers the
+    *next* line (so multi-line statements are annotated above)."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",")}
+        target = i + 1 if text.lstrip().startswith("#") else i
+        out.setdefault(target, set()).update(rules)
+        if "ALL" in rules:
+            out[target].update(("D1", "L1", "A1", "S1", "P1"))
+    return out
+
+
+class Checker(ast.NodeVisitor):
+    """Base class: subclasses set ``rule``/``description`` and call
+    ``self.report(node, msg)``.  Suppression filtering is central
+    (``lint_source``), so checkers just report."""
+
+    rule = "X0"
+    description = ""
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.findings: List[Finding] = []
+
+    def report(self, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            self.rule, self.ctx.relpath,
+            getattr(node, "lineno", 0), getattr(node, "col_offset", 0),
+            message))
+
+    def run(self) -> List[Finding]:
+        self.visit(self.ctx.tree)
+        return self.findings
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ------------------------------------------------------------- running
+def lint_source(source: str, relpath: str,
+                checkers: Iterable[type]) -> List[Finding]:
+    """Lint one file's source; returns unsuppressed findings."""
+    ctx = FileContext(relpath, source)
+    out: List[Finding] = []
+    for cls in checkers:
+        for f in cls(ctx).run():
+            if not ctx.suppressed(f.rule, f.line):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def iter_py_files(paths: Sequence[str], root: str) -> List[str]:
+    """Expand files/directories into .py files (absolute paths)."""
+    out: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if not d.startswith(".") and d != "__pycache__")
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def lint_paths(paths: Sequence[str], root: str,
+               checkers: Iterable[type]) -> List[Finding]:
+    findings: List[Finding] = []
+    for ap in iter_py_files(paths, root):
+        rel = os.path.relpath(ap, root)
+        with open(ap, encoding="utf-8") as f:
+            src = f.read()
+        try:
+            findings.extend(lint_source(src, rel, checkers))
+        except SyntaxError as e:
+            findings.append(Finding("E0", rel.replace(os.sep, "/"),
+                                    e.lineno or 0, e.offset or 0,
+                                    f"syntax error: {e.msg}"))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ------------------------------------------------------------ baseline
+def load_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: Sequence[Finding]):
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"findings": sorted({x.key for x in findings})},
+                  f, indent=1)
+        f.write("\n")
+
+
+def split_by_baseline(findings: Sequence[Finding],
+                      baseline: Sequence[str]):
+    """(new, accepted, stale) — findings not in the baseline, findings
+    covered by it, and baseline keys no longer observed."""
+    base = set(baseline)
+    new = [f for f in findings if f.key not in base]
+    accepted = [f for f in findings if f.key in base]
+    seen = {f.key for f in findings}
+    stale = sorted(base - seen)
+    return new, accepted, stale

@@ -1,0 +1,225 @@
+"""D1 — determinism: the simulator/control/core/solver layers must be
+bit-reproducible from their seeds (every lossless/bit-identical claim
+in CHANGES.md rests on it).  Inside ``src/repro/{simulator,control,
+core,solver}`` this flags:
+
+* ambient-entropy calls: module-level ``random.*`` / ``np.random.*``
+  RNG functions, argless ``default_rng()`` / ``random.Random()`` /
+  ``np.random.RandomState()``, wall-clock reads (``time.time``,
+  ``time.monotonic``, ``time.perf_counter``, ``datetime.now`` ...);
+* iteration over ``set`` values — hash-order-dependent for strings
+  under PYTHONHASHSEED, so float accumulation or any order-sensitive
+  consumption over a set varies across runs (iterate ``sorted(...)``);
+* ``dict.values()/.items()/.keys()`` loops whose body feeds an
+  order-sensitive sink (heap pushes, solver row/var assembly, router
+  calls) — insertion order is deterministic only when every inserter
+  is, so these sites deserve an explicit ordering.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from .base import Checker, dotted_name
+
+D1_DIRS = ("src/repro/simulator/", "src/repro/control/",
+           "src/repro/core/", "src/repro/solver/")
+
+_RANDOM_MODULE_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "expovariate",
+    "betavariate", "triangular", "seed", "getrandbits", "vonmisesvariate",
+}
+_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+}
+_DATETIME_CALLS = {
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+_ORDER_SINKS = {"push", "heappush", "heappop", "heapify", "add_var",
+                "add_constr", "add_vars", "add_constrs_coo", "route"}
+
+
+def _is_setlike(node: ast.AST,
+                assigns: Optional[Dict[str, List[ast.AST]]] = None,
+                depth: int = 0) -> bool:
+    """Statically set-typed: literals, set()/frozenset() calls, set
+    unions/intersections/differences, set-method chains, and names with
+    a single visible set-typed assignment in the enclosing scopes."""
+    if depth > 4:
+        return False
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("union", "intersection",
+                                       "difference",
+                                       "symmetric_difference") \
+                and _is_setlike(node.func.value, assigns, depth + 1):
+            return True
+        return False
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+        return _is_setlike(node.left, assigns, depth + 1) \
+            or _is_setlike(node.right, assigns, depth + 1)
+    if isinstance(node, ast.Name) and assigns is not None:
+        vals = assigns.get(node.id)
+        if vals is not None and len(vals) == 1:
+            return _is_setlike(vals[0], assigns, depth + 1)
+    return False
+
+
+def _collect_assigns(scope: ast.AST) -> Dict[str, List[ast.AST]]:
+    """name -> assigned value nodes within ``scope``, not descending
+    into nested function/class scopes."""
+    out: Dict[str, List[ast.AST]] = {}
+
+    def walk(node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            if isinstance(child, ast.Assign):
+                for tgt in child.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.setdefault(tgt.id, []).append(child.value)
+            elif isinstance(child, ast.AnnAssign) and child.value is not None:
+                if isinstance(child.target, ast.Name):
+                    out.setdefault(child.target.id, []).append(child.value)
+            elif isinstance(child, (ast.AugAssign, ast.For)):
+                # reassignment makes single-assignment tracking unsafe
+                tgt = child.target
+                if isinstance(tgt, ast.Name):
+                    out.setdefault(tgt.id, []).append(ast.Constant(None))
+            walk(child)
+
+    walk(scope)
+    return out
+
+
+class DeterminismChecker(Checker):
+    rule = "D1"
+    description = "unseeded entropy / hash-order iteration in " \
+                  "determinism-critical layers"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        self._scopes: List[Dict[str, List[ast.AST]]] = []
+        self.enabled = any(ctx.relpath.startswith(d) for d in D1_DIRS)
+
+    def run(self):
+        if not self.enabled:
+            return self.findings
+        self._scopes.append(_collect_assigns(self.ctx.tree))
+        self.visit(self.ctx.tree)
+        return self.findings
+
+    # ------------------------------------------------------- scoping
+    def _with_scope(self, node):
+        self._scopes.append(_collect_assigns(node))
+        self.generic_visit(node)
+        self._scopes.pop()
+
+    visit_FunctionDef = _with_scope
+    visit_AsyncFunctionDef = _with_scope
+
+    def _lookup(self) -> Dict[str, List[ast.AST]]:
+        merged: Dict[str, List[ast.AST]] = {}
+        for sc in self._scopes:
+            merged.update(sc)
+        return merged
+
+    # --------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call):
+        name = dotted_name(node.func)
+        if name:
+            self._check_entropy(node, name)
+        self.generic_visit(node)
+
+    def _check_entropy(self, node: ast.Call, name: str):
+        parts = name.split(".")
+        head = parts[0]
+        if name in _CLOCK_CALLS:
+            self.report(node, f"wall-clock read {name}() in a "
+                              "determinism-critical layer")
+            return
+        if name in _DATETIME_CALLS or \
+                (len(parts) >= 2 and parts[-1] in ("now", "utcnow")
+                 and parts[-2] == "datetime"):
+            self.report(node, f"wall-clock read {name}() in a "
+                              "determinism-critical layer")
+            return
+        if head in ("np", "numpy") and len(parts) >= 3 \
+                and parts[1] == "random":
+            tail = parts[2]
+            if tail in ("default_rng", "RandomState", "Generator"):
+                if not node.args and not node.keywords:
+                    self.report(node, f"argless {name}() seeds from OS "
+                                      "entropy; pass an explicit seed")
+            else:
+                self.report(node, f"global numpy RNG {name}() — use a "
+                                  "seeded np.random.Generator stream")
+            return
+        if head == "random" and len(parts) == 2:
+            tail = parts[1]
+            if tail in ("Random", "SystemRandom"):
+                if tail == "SystemRandom" or not node.args:
+                    self.report(node, f"unseeded {name}() — pass an "
+                                      "explicit seed")
+            elif tail in _RANDOM_MODULE_FNS:
+                self.report(node, f"module-level {name}() uses the "
+                                  "shared global RNG — use a seeded "
+                                  "random.Random instance")
+            return
+        if name == "default_rng" and not node.args and not node.keywords:
+            self.report(node, "argless default_rng() seeds from OS "
+                              "entropy; pass an explicit seed")
+
+    # ----------------------------------------------------- iteration
+    def visit_For(self, node: ast.For):
+        self._check_iter(node.iter, node)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node):
+        for gen in node.generators:
+            self._check_iter(gen.iter, node)
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    def _check_iter(self, it: ast.AST, node: ast.AST):
+        if _is_setlike(it, self._lookup()):
+            self.report(node, "iteration over a set is hash-order-"
+                              "dependent; iterate sorted(...) instead")
+            return
+        if isinstance(node, ast.For) and isinstance(it, ast.Call) \
+                and isinstance(it.func, ast.Attribute) \
+                and it.func.attr in ("values", "items", "keys") \
+                and not it.args:
+            sink = self._body_sink(node)
+            if sink:
+                self.report(
+                    node, f"dict .{it.func.attr}() loop feeds "
+                          f"order-sensitive sink {sink}(); iterate a "
+                          "sorted or explicitly-ordered view")
+
+    @staticmethod
+    def _body_sink(node: ast.For) -> str:
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call):
+                    fn = sub.func
+                    nm = fn.attr if isinstance(fn, ast.Attribute) \
+                        else fn.id if isinstance(fn, ast.Name) else None
+                    if nm in _ORDER_SINKS:
+                        return nm
+        return ""

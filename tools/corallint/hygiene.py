@@ -1,0 +1,68 @@
+"""P1 — general hygiene: mutable default arguments (shared across
+calls) and mutable dataclass field defaults (``= []`` raises at class
+creation for list/dict/set, but mutable *constructor* defaults like
+``= deque()`` slip through and are shared across instances — use
+``field(default_factory=...)``).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Checker, dotted_name
+
+MUTABLE_CTORS = {"list", "dict", "set", "deque", "defaultdict",
+                 "OrderedDict", "Counter", "bytearray"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name and name.split(".")[-1] in MUTABLE_CTORS:
+            return True
+    return False
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target)
+        if name and name.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+class HygieneChecker(Checker):
+    rule = "P1"
+    description = "mutable default argument / mutable dataclass field " \
+                  "default"
+
+    def _visit_func(self, node):
+        args = node.args
+        for default in list(args.defaults) + [
+                d for d in args.kw_defaults if d is not None]:
+            if _is_mutable_literal(default):
+                self.report(default, "mutable default argument is "
+                                     "shared across calls — default to "
+                                     "None and construct inside")
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+    visit_Lambda = _visit_func
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        if _is_dataclass(node):
+            for item in node.body:
+                value = None
+                if isinstance(item, ast.AnnAssign):
+                    value = item.value
+                elif isinstance(item, ast.Assign):
+                    value = item.value
+                if value is not None and _is_mutable_literal(value):
+                    self.report(value, "mutable dataclass field default "
+                                       "is shared across instances — "
+                                       "use field(default_factory=...)")
+        self.generic_visit(node)

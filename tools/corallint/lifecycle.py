@@ -1,0 +1,73 @@
+"""L1 — instance lifecycle: the init -> ready -> draining -> dead state
+machine hardened in the fault-injection PR is only sound when state
+fields are written through the sanctioned ``Simulator`` transition
+methods (``drain_instance`` / ``kill_instance`` / ``crash_instance`` /
+``degrade_instance`` and their internal completions), which settle the
+batched accounting and re-route work atomically with the flag flip.  A
+bare ``inst.dead = True`` anywhere else silently corrupts routing pools
+and token conservation.
+
+Allowed writes: ``self.<field> = ...`` inside any ``__init__`` (initial
+state), and writes inside the sanctioned methods of
+``simulator/sim.py``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import Checker
+
+STATE_FIELDS = {"state", "dead", "draining", "failed"}
+SANCTIONED = {"drain_instance", "kill_instance", "crash_instance",
+              "degrade_instance", "_restore_speed", "_after_decode_iter"}
+
+
+class LifecycleChecker(Checker):
+    rule = "L1"
+    description = "direct instance state-field write outside the " \
+                  "sanctioned sim.py transition methods"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        self._funcs: List[str] = []
+        self._in_sim = ctx.relpath.endswith("simulator/sim.py")
+
+    def _visit_func(self, node):
+        self._funcs.append(node.name)
+        self.generic_visit(node)
+        self._funcs.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _check_target(self, tgt: ast.AST):
+        if not (isinstance(tgt, ast.Attribute)
+                and tgt.attr in STATE_FIELDS):
+            return
+        fn = self._funcs[-1] if self._funcs else ""
+        if fn == "__init__" and isinstance(tgt.value, ast.Name) \
+                and tgt.value.id == "self":
+            return                          # initial state
+        if self._in_sim and fn in SANCTIONED:
+            return                          # sanctioned transition
+        self.report(tgt, f"direct write to .{tgt.attr} outside the "
+                         "sanctioned lifecycle transitions (use "
+                         "drain/kill/crash/degrade_instance)")
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Tuple):
+                for el in tgt.elts:
+                    self._check_target(el)
+            else:
+                self._check_target(tgt)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        self._check_target(node.target)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check_target(node.target)
+        self.generic_visit(node)

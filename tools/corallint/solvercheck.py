@@ -1,0 +1,82 @@
+"""S1 — solver misuse: the columnar allocator PR made the epoch loop's
+model assembly batched (``add_vars`` + ``add_constrs_coo`` over COO
+triplets); per-variable ``add_var``/``add_constr`` calls inside loops
+re-introduce the O(n) python-level assembly that PR measured at ~35x
+slower, so they are banned on epoch-loop call paths (the reference
+oracle ``allocate_reference`` keeps them under an inline suppression).
+
+Also flags COO triplet calls whose (data, rows, cols) arguments are
+literals of statically-unequal lengths — a shape mismatch the solver
+would only surface at runtime as a scipy broadcast error.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Checker
+
+PER_VAR_API = {"add_var", "add_constr"}
+
+# epoch-loop call paths: the online allocator and everything above it.
+# The offline placement solver, the milp wrapper's own internals, and
+# solver unit tests legitimately exercise the per-variable API.
+S1_DIRS = ("src/repro/core/allocator.py", "src/repro/runtime/",
+           "src/repro/control/")
+
+
+class SolverChecker(Checker):
+    rule = "S1"
+    description = "per-variable solver API in a loop / static COO " \
+                  "triplet shape mismatch"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        self._loop_depth = 0
+        self._per_var_scope = any(ctx.relpath.startswith(d)
+                                  for d in S1_DIRS)
+
+    def _visit_loop(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+
+    def _visit_comp(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    def visit_Call(self, node: ast.Call):
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) \
+            else fn.id if isinstance(fn, ast.Name) else None
+        if name in PER_VAR_API and self._loop_depth > 0 \
+                and self._per_var_scope:
+            self.report(node, f"per-variable {name}() inside a loop — "
+                              "use the batched add_vars/"
+                              "add_constrs_coo (COO) API on epoch-loop "
+                              "paths")
+        if name == "add_constrs_coo":
+            self._check_coo(node)
+        self.generic_visit(node)
+
+    def _check_coo(self, node: ast.Call):
+        lens = []
+        for arg in node.args[:3]:
+            if isinstance(arg, (ast.List, ast.Tuple)) \
+                    and not any(isinstance(e, ast.Starred)
+                                for e in arg.elts):
+                lens.append(len(arg.elts))
+            else:
+                return                  # dynamic: not statically checkable
+        if len(lens) == 3 and len(set(lens)) > 1:
+            self.report(node, "COO triplet shape mismatch: "
+                              f"len(data)={lens[0]}, len(rows)={lens[1]}, "
+                              f"len(cols)={lens[2]} must be equal")

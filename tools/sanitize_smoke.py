@@ -1,0 +1,109 @@
+"""CORAL_SANITIZE=1 equivalence smoke (CI leg; see tools/README.md).
+
+Runs the five control scenarios plus the crash_storm fault scenario
+through ``ClusterRuntime`` twice — span-batched simulator vs the
+per-iteration oracle (``sim_batched=False``) — with the runtime
+invariant sanitizer (repro.debug.invariants) armed, and requires the
+two runs to agree *bit-identically*: per-epoch goodput/throughput/cost
+and the simulator's finished/dropped/shed accounting.
+
+This is the PR's acceptance harness: the sanitizer audits conservation
+laws at every epoch edge while the batched/oracle comparison proves the
+span machinery still reproduces the reference loop exactly, fault
+injection included.
+
+Usage (from the repo root):
+    CORAL_SANITIZE=1 PYTHONPATH=src python tools/sanitize_smoke.py
+The flag is forced on if absent, so a bare invocation also works.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+os.environ.setdefault("CORAL_SANITIZE", "1")
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.common import cached_library, scenario  # noqa: E402
+from repro.control import (FaultInjector, RestartPolicy,  # noqa: E402
+                           SCENARIO_NAMES, make_scenario)
+from repro.core.allocator import AllocatorState  # noqa: E402
+from repro.debug import invariants as _inv  # noqa: E402
+from repro.runtime.cluster import ClusterRuntime  # noqa: E402
+from repro.simulator.sim import ShedPolicy  # noqa: E402
+
+N_EPOCHS = 8
+EPOCH_S = 240.0
+BASE_RATE = 2.0
+SEED = 2
+SMOKE_NAMES = SCENARIO_NAMES + ("crash_storm",)
+
+
+def _one_run(name, batched, models, regions, configs, wls, lib):
+    # regenerate the scenario per run: the simulator mutates Request
+    # objects in place, so the two disciplines must not share a trace
+    sc = make_scenario(name, models, regions, configs, wls,
+                       n_epochs=N_EPOCHS, epoch_s=EPOCH_S,
+                       base_rate=BASE_RATE, seed=SEED)
+    kw = {}
+    inj = None
+    if sc.faults is not None:
+        inj = FaultInjector(sc.faults)
+        kw = dict(health_check_s=15.0,
+                  restart_policy=RestartPolicy(backoff_base_s=20.0,
+                                               budget_per_epoch=4))
+    rt = ClusterRuntime(models, regions, configs, lib, AllocatorState(),
+                        wls, epoch_s=sc.epoch_s, sim_batched=batched,
+                        spot_market=sc.spot_market,
+                        shed_policy=ShedPolicy(), **kw)
+    res = rt.run(sc.requests, sc.availability, sc.truth_demands,
+                 fault_injector=inj)
+    sim = rt.sim
+    return {
+        "epochs": [(e.epoch, e.cost_per_hour, tuple(sorted(
+            e.goodput.items())), tuple(sorted(e.throughput.items())),
+            e.n_instances, e.n_new, e.n_drained, e.n_preempted,
+            e.n_failed, e.n_restarted, e.n_shed, e.alloc_source)
+            for e in res.epochs],
+        "finished": sorted((r.rid, r.decode_tokens_ok, r.decode_slo_ok)
+                           for r in sim.finished),
+        "dropped": dict(sim.dropped_by_model),
+        "shed": dict(sim.shed_by_model),
+        "tokens": {m: sim.tokens[m]._total for m in sorted(sim.tokens)},
+    }
+
+
+def main() -> int:
+    if not _inv.sanitize_enabled():
+        print("sanitize_smoke: CORAL_SANITIZE is off?!")
+        return 2
+    models, configs, regions, wls = scenario(extended=False)
+    lib = cached_library("core", models, configs, wls)
+    failures = []
+    for name in SMOKE_NAMES:
+        t0 = time.time()
+        batched = _one_run(name, True, models, regions, configs, wls, lib)
+        oracle = _one_run(name, False, models, regions, configs, wls, lib)
+        ok = batched == oracle
+        print(f"sanitize_smoke: {name:18s} "
+              f"{'bit-identical' if ok else 'MISMATCH'} "
+              f"({time.time() - t0:.1f}s)")
+        if not ok:
+            failures.append(name)
+            for k in batched:
+                if batched[k] != oracle[k]:
+                    print(f"  field {k!r} differs")
+    if failures:
+        print(f"sanitize_smoke: FAILED for {failures}")
+        return 1
+    print(f"sanitize_smoke: {len(SMOKE_NAMES)} scenarios bit-identical "
+          "(batched vs oracle) under CORAL_SANITIZE=1")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
