@@ -45,6 +45,15 @@ class ControllerConfig:
     emergency_mult: float = 2.0     # a drift this many times the trigger
     #                                 threshold bypasses the cooldown
     #                                 (storm onset/recovery, demand cliffs)
+    # -- mid-epoch (event-driven) evaluation, affordable now that a
+    # re-solve is sub-second: ``decide_event`` fires once the capacity
+    # lost to availability events (preemptions, failed restarts) since
+    # the last solve reaches ``event_loss_frac`` of the held fleet, at
+    # most ``max_mid_resolves`` times per epoch and never two solves
+    # closer than ``min_event_gap_s`` of simulated time
+    event_loss_frac: float = 0.1
+    max_mid_resolves: int = 2
+    min_event_gap_s: float = 30.0
 
 
 @dataclass(frozen=True)
@@ -52,7 +61,7 @@ class ResolveDecision:
     resolve: bool
     reason: str                     # initial/demand_drift/avail_delta/
     #                                 preempted/failure/cadence/
-    #                                 cooldown/steady
+    #                                 cooldown/steady/event
 
 
 class ReSolveController:
@@ -67,6 +76,10 @@ class ReSolveController:
         self._since = 0
         self._armed_demand = True
         self._armed_avail = True
+        # mid-epoch (event-driven) state
+        self._event_losses = 0
+        self._mid_this_epoch = 0
+        self._last_mid_t = -float("inf")
 
     # ----------------------------------------------------------- drifts
     def demand_drift(self, demands: Sequence[Demand]) -> float:
@@ -106,6 +119,7 @@ class ReSolveController:
                n_failed: int = 0) -> ResolveDecision:
         cfg = self.cfg
         self._since += 1
+        self._mid_this_epoch = 0        # fresh mid-epoch budget
         if self._ref_demand is None:
             return ResolveDecision(True, "initial")
         if n_preempted > 0:
@@ -152,12 +166,42 @@ class ReSolveController:
             return ResolveDecision(True, "cadence")
         return ResolveDecision(False, "steady")
 
+    def decide_event(self, now: float, n_lost: int,
+                     n_held: int) -> ResolveDecision:
+        """Sub-epoch evaluation hook, driven by availability events.
+
+        The runtime calls this the moment capacity is lost *inside* an
+        epoch (a detected node failure, a replacement blocked by
+        vanished supply) instead of waiting for the epoch edge.  Losses
+        accumulate across calls; a re-solve fires once they reach
+        ``event_loss_frac`` of the held fleet — throttled by the
+        per-epoch ``max_mid_resolves`` budget and the
+        ``min_event_gap_s`` spacing so a storm of events cannot thrash
+        the solver.  ``now`` is simulated time (seconds)."""
+        cfg = self.cfg
+        self._event_losses += max(int(n_lost), 0)
+        if self._ref_avail is None:
+            # no standing solve yet: the epoch loop's "initial" decision
+            # owns the first solve
+            return ResolveDecision(False, "steady")
+        if self._mid_this_epoch >= cfg.max_mid_resolves:
+            return ResolveDecision(False, "cooldown")
+        if now - self._last_mid_t < cfg.min_event_gap_s:
+            return ResolveDecision(False, "cooldown")
+        need = max(1.0, cfg.event_loss_frac * max(n_held, 1))
+        if self._event_losses < need:
+            return ResolveDecision(False, "steady")
+        self._mid_this_epoch += 1
+        self._last_mid_t = now
+        return ResolveDecision(True, "event")
+
     def notify_solved(self, demands: Sequence[Demand],
                       availability: Dict[Tuple[str, str], int]):
         self._ref_demand = {(d.model, d.phase): d.tokens_per_s
                             for d in demands}
         self._ref_avail = {k: float(v) for k, v in availability.items()}
         self._since = 0
+        self._event_losses = 0          # the solve absorbed the losses
         # the drift references just moved: any future excursion is fresh
         # information, so re-arm both triggers.  The Schmitt disarm
         # therefore only throttles a trigger whose solve *failed* (the

@@ -48,9 +48,15 @@ from repro.core.hardware import NodeConfig, Region
 from repro.debug import invariants as _inv
 from repro.core.templates import (LibraryColumns, ServingTemplate,
                                   TemplateLibrary)
+from repro.solver import decompose as _dec
 from repro.solver.milp import MilpModel
 
 MIP_GAP = 1e-4
+# acceptance gap of the fast tiers (decomposed / rounded-LP): a tier's
+# solution is only returned when its objective provably sits within
+# this relative gap of a valid lower bound on the monolithic optimum —
+# otherwise the solve escalates (the "lossless escape hatch")
+ACCEPT_GAP = 5e-4
 
 
 @dataclass(frozen=True)
@@ -71,6 +77,11 @@ class AllocProblem:
     init_penalty_k: float = 0.1                    # K (init time / interval)
     time_limit: float = 60.0
     max_templates_per_demand: int = 1200           # solver-scaling knob
+    # solve-path selector: "auto" runs the three-tier ladder
+    # (decomposed -> rounded LP -> monolithic MIP, escalating only when
+    # a tier cannot certify its objective within ACCEPT_GAP); the other
+    # values force a single tier (benchmarks, tests, A/B comparisons)
+    solve_mode: str = "auto"       # auto|decomposed|rounded_lp|monolithic
 
 
 @dataclass
@@ -86,6 +97,9 @@ class Allocation:
     objective: float = np.nan                      # full MILP objective
     build_seconds: float = 0.0                     # model assembly (excl. solve)
     fallback: bool = False                         # incumbent returned on failure
+    solve_path: str = "monolithic"                 # tier that produced it
+    solver_seconds: float = 0.0                    # pure solver time
+    extract_seconds: float = 0.0                   # solution extraction
 
     @property
     def total_nodes(self) -> int:
@@ -383,12 +397,24 @@ class AllocatorState:
         self._coo_rows = np.concatenate(seg_r)
         self._coo_cols = np.concatenate(seg_c)
 
+        # 0-based availability COO, reused by the decomposed tier
+        # (DecomposeProblem) and the rounding tier's slack accounting
+        self._av_coo = (
+            np.concatenate(av_d) if av_d else np.zeros(0),
+            np.concatenate(av_r) if av_r else np.zeros(0, dtype=np.int64),
+            np.concatenate(av_c) if av_c else np.zeros(0, dtype=np.int64))
+        # column-major layout (data, rows, indptr over vars) so the
+        # greedy rounding fill can query one var's availability rows
+        c_ord = np.argsort(self._av_coo[2], kind="stable")
+        self._av_csc = (
+            self._av_coo[0][c_ord], self._av_coo[1][c_ord],
+            np.searchsorted(self._av_coo[2][c_ord], np.arange(V + 1)))
+
         # sparse availability matrix for incumbent repair
         try:
             from scipy import sparse
             self._A_avail = sparse.csr_matrix(
-                (np.concatenate(av_d),
-                 (np.concatenate(av_r), np.concatenate(av_c))),
+                (self._av_coo[0], (self._av_coo[1], self._av_coo[2])),
                 shape=(n_avail, V))
         except Exception:                              # pragma: no cover
             self._A_avail = None
@@ -475,6 +501,138 @@ class AllocatorState:
         z += float(pen_vec @ s_inc)
         return x, s_inc, z
 
+    # --------------------------------------------------- decomposed tier
+    def _decompose_problem(self, v_ub: np.ndarray, cur: np.ndarray,
+                           tokens: np.ndarray, pen_vec: np.ndarray,
+                           avail_rhs: np.ndarray) -> "_dec.DecomposeProblem":
+        """Mirror this epoch's arrays as a ``DecomposeProblem``: one
+        ``RowSpec`` per (model, phase) demand (empty for pairs with no
+        templates — their forced full shortfall must still be priced),
+        grouped into per-model ``ModelSpec``s by slack index."""
+        R = len(self._regions)
+        rows_by_m: List[List[_dec.RowSpec]] = [[] for _ in range(self._M)]
+        e = np.zeros(0)
+        for di, pb in enumerate(self._pairs):
+            m = self._dem_model_idx[di]
+            if pb is None:
+                rows_by_m[m].append(_dec.RowSpec(
+                    np.zeros(0, dtype=np.int64), e, e, e, e,
+                    float(tokens[di])))
+                continue
+            lo, hi = pb.base, pb.base + pb.n * R
+            rows_by_m[m].append(_dec.RowSpec(
+                np.arange(lo, hi), self._v_obj[lo:hi], np.tile(pb.thr, R),
+                v_ub[lo:hi], cur[lo:hi], float(tokens[di])))
+        models = [_dec.ModelSpec(i, rows, float(pen_vec[i]))
+                  for i, rows in enumerate(rows_by_m)]
+        d, r, c = self._av_coo
+        return _dec.DecomposeProblem(self._V, models, self._k, d, r, c,
+                                     avail_rhs.astype(float))
+
+    def _round_lp(self, xv_lp: np.ndarray, v_ub: np.ndarray,
+                  dp: "_dec.DecomposeProblem", avail_rhs: np.ndarray,
+                  tokens: np.ndarray) -> np.ndarray:
+        """Round the LP relaxation down (always availability-feasible),
+        then re-fill each demand's deficit in two greedy phases.
+
+        Phase 1 bulk-fills in marginal cost-efficiency (cost/token)
+        order but never overshoots the target: an LP vertex routinely
+        serves a small demand with a tiny *fraction* of one huge
+        template, and "one whole instance of the most efficient
+        column" can over-provision such a pair by orders of magnitude.
+        Phase 2 closes the sub-instance residual by the cheapest
+        *total* addition — min over columns of ceil(residual/thr)*cost
+        — which picks the small cheap instance the MIP would.  Both
+        phases cap takes by the remaining availability slack of every
+        config row the candidate column touches."""
+        R = len(self._regions)
+        v = np.clip(np.floor(xv_lp + 1e-6), 0.0, v_ub)
+        slack = (avail_rhs - dp.usage(v)).astype(float)
+        dcs, rcs, indptr = self._av_csc
+
+        def room_of(j):
+            r = v_ub[j] - v[j]
+            a, b_ = indptr[j], indptr[j + 1]
+            if b_ > a:
+                r = min(r, float(np.min(slack[rcs[a:b_]] / dcs[a:b_])))
+            return float(np.floor(r + 1e-9))
+
+        def apply(j, take, thr_j):
+            v[j] += take
+            a, b_ = indptr[j], indptr[j + 1]
+            if b_ > a:
+                slack[rcs[a:b_]] -= take * dcs[a:b_]
+            return take * thr_j
+
+        for di, pb in enumerate(self._pairs):
+            if pb is None:
+                continue
+            lo, hi = pb.base, pb.base + pb.n * R
+            thr = np.tile(pb.thr, R)
+            deficit = tokens[di] - float(thr @ v[lo:hi])
+            if deficit <= 1e-9:
+                continue
+            cost = self._v_obj[lo:hi]
+            eff = np.argsort(cost / np.maximum(thr, 1e-12), kind="stable")
+            # phase 1: bulk fill, rounding the take *down* (no overshoot)
+            for jl in eff:
+                if deficit <= 1e-9:
+                    break
+                if thr[jl] <= 1e-12:
+                    continue
+                j = lo + int(jl)
+                take = min(room_of(j), np.floor(deficit / thr[jl] + 1e-9))
+                if take >= 1.0:
+                    deficit -= apply(j, take, thr[jl])
+            # phase 2: close the residual at minimum total cost
+            while deficit > 1e-9:
+                best_jl, best_tot, best_take = -1, np.inf, 0.0
+                part_jl, part_take = -1, 0.0
+                for jl in eff:
+                    if thr[jl] <= 1e-12:
+                        continue
+                    room = room_of(lo + int(jl))
+                    if room < 1.0:
+                        continue
+                    need = np.ceil(deficit / thr[jl])
+                    if room >= need:
+                        tot = need * cost[jl]
+                        if tot < best_tot - 1e-12:
+                            best_jl, best_tot, best_take = int(jl), tot, need
+                    elif part_jl < 0:
+                        # most efficient partial cover as a last resort
+                        part_jl, part_take = int(jl), room
+                if best_jl >= 0:
+                    jl, take = best_jl, best_take
+                elif part_jl >= 0:
+                    jl, take = part_jl, part_take
+                else:
+                    break               # supply exhausted: leave shortfall
+                deficit -= apply(lo + jl, take, thr[jl])
+        return v
+
+    def _finish(self, xv, xi, xs, objective, tokens, cur, p, t0,
+                n_vars, solver_s, path, fallback=False) -> Allocation:
+        """Common epilogue of every successful tier: extract, stamp the
+        solve-path/time breakdown, advance the warm start, sanitize."""
+        # corallint: disable=D1 - build/extract-seconds telemetry only
+        build_s = time.time() - t0 - solver_s
+        te = time.time()    # corallint: disable=D1 - telemetry only
+        alloc = self._extract(xv, xi, xs, tokens, cur, p, t0, n_vars,
+                              build_s)
+        # corallint: disable=D1 - telemetry only
+        alloc.extract_seconds = time.time() - te
+        alloc.solver_seconds = solver_s
+        alloc.solve_path = path
+        alloc.objective = objective
+        alloc.fallback = fallback
+        self._prev_x = np.rint(np.asarray(xv)).astype(np.int64)
+        if not fallback and _inv.sanitize_enabled():
+            # CORAL_SANITIZE=1: a successful solve must honor the
+            # availability constraint it was handed — on *every* tier
+            _inv.check_allocation(alloc, p.availability)
+        return alloc
+
     def solve(self, p: AllocProblem) -> Allocation:
         # corallint: disable=D1 - build/solve-seconds telemetry only
         t0 = time.time()
@@ -524,49 +682,124 @@ class AllocatorState:
             s_ub = np.minimum(s_ub,
                               margin / np.maximum(pen_vec, 1e-12))
 
-        mdl = MilpModel()
-        mdl.add_vars(self._v_obj, 0.0, v_ub, True)          # v
-        mdl.add_vars(np.ones(V), 0.0, np.inf, False)        # I
-        mdl.add_vars(pen_vec, 0.0, s_ub, False)             # s_m
-        mdl.add_constrs_coo(self._coo_data, self._coo_rows, self._coo_cols,
-                            lb=row_lb, ub=row_ub)
-        # corallint: disable=D1 - build-seconds telemetry only
-        build_s = time.time() - t0
+        mode = p.solve_mode
+        deadline = t0 + max(p.time_limit, 0.0)
+        solver_s = 0.0
+        n_vars_full = 2 * V + M
+        # best feasible candidate so far: (v, s, honest objective) —
+        # seeds warm starts downward and is the fallback of last resort
+        best = inc
 
-        try:
-            res = mdl.solve(time_limit=p.time_limit, gap=MIP_GAP)
-        except Exception:
-            # degradation ladder: a crashing solver is treated exactly
-            # like a timed-out one — fall through to the incumbent
-            # fallback (or a not-ok Allocation) rather than raising
-            # into the epoch loop and draining the cluster
-            res = None
-        if res is None or not res.ok:
-            if inc is not None:
-                alloc = self._extract(inc[0], None, inc[1], tokens, cur,
-                                      p, t0, mdl.n, build_s)
-                alloc.fallback = True
-                alloc.objective = inc[2]
-                self._prev_x = np.rint(inc[0]).astype(np.int64)
-                return alloc
-            return Allocation({}, {}, np.inf, 0.0,
-                              {(d.model, d.phase): d.tokens_per_s
-                               for d in p.demands},
-                              # corallint: disable=D1 - telemetry only
-                              time.time() - t0, mdl.n, False,
-                              build_seconds=build_s)
-        xv = res.x[:V]
-        xi = res.x[V:2 * V]
-        xs = res.x[2 * V:]
-        alloc = self._extract(xv, xi, xs, tokens, cur, p, t0, mdl.n,
-                              build_s)
-        alloc.objective = res.obj
-        self._prev_x = np.rint(xv).astype(np.int64)
-        if _inv.sanitize_enabled():
-            # CORAL_SANITIZE=1: a successful solve must honor the
-            # availability constraint it was handed
-            _inv.check_allocation(alloc, p.availability)
-        return alloc
+        # ---- tier 1: per-model price-coordinated decomposition -------
+        dp = None
+        if mode in ("auto", "decomposed"):
+            dp = self._decompose_problem(v_ub, cur, tokens, pen_vec,
+                                         avail_rhs)
+            prev = self._prev_x.astype(float) \
+                if self._prev_x is not None else None
+            # corallint: disable=D1 - tier time budget only
+            rem = max(deadline - time.time(), min(p.time_limit, 1.0))
+            try:
+                dres = _dec.solve_decomposed(dp, prev_v=prev,
+                                             accept_gap=ACCEPT_GAP,
+                                             time_limit=rem)
+            except Exception:
+                # same degradation discipline as the solvers below: a
+                # crashing tier escalates, it never raises upward
+                dres = _dec.DecomposeResult(False, False, None, None)
+            solver_s += dres.seconds
+            if dres.ok and dres.objective < (best[2] if best else np.inf):
+                best = (dres.v, dres.s, dres.objective)
+            if dres.ok and (dres.certified or mode == "decomposed"):
+                return self._finish(dres.v, None, dres.s, dres.objective,
+                                    tokens, cur, p, t0, n_vars_full,
+                                    solver_s, "decomposed")
+
+        if mode != "decomposed":
+            if best is not None and best is not inc:
+                # a fast-tier candidate cheaper than the incumbent
+                # re-tightens the bound pruning before assembly
+                margin = best[2] * (1.0 + 1e-9) + 1e-9
+                v_ub = np.minimum(v_ub, np.floor(
+                    margin / np.maximum(self._v_obj, 1e-12)))
+                s_ub = np.minimum(s_ub,
+                                  margin / np.maximum(pen_vec, 1e-12))
+            mdl = MilpModel()
+            mdl.add_vars(self._v_obj, 0.0, v_ub, True)          # v
+            mdl.add_vars(np.ones(V), 0.0, np.inf, False)        # I
+            mdl.add_vars(pen_vec, 0.0, s_ub, False)             # s_m
+            mdl.add_constrs_coo(self._coo_data, self._coo_rows,
+                                self._coo_cols, lb=row_lb, ub=row_ub)
+
+            # ---- tier 2: LP relaxation + greedy rounding -------------
+            if mode in ("auto", "rounded_lp"):
+                if dp is None:
+                    dp = self._decompose_problem(v_ub, cur, tokens,
+                                                 pen_vec, avail_rhs)
+                # corallint: disable=D1 - tier time budget only
+                rem = max(deadline - time.time(), min(p.time_limit, 1.0))
+                try:
+                    lp = mdl.solve(time_limit=rem, gap=MIP_GAP,
+                                   relax=True)
+                except Exception:
+                    lp = None
+                if lp is not None:
+                    # failed solves still burn solver time (HiGHS
+                    # presolve is not interruptible): always count it,
+                    # or it leaks into the assembly metric
+                    solver_s += lp.seconds
+                if lp is not None and lp.ok:
+                    v_r = self._round_lp(lp.x[:V], v_ub, dp, avail_rhs,
+                                         tokens)
+                    z_r, s_r = _dec._honest(dp, v_r)
+                    if z_r < (best[2] if best else np.inf):
+                        best = (v_r, s_r, z_r)
+                    # the LP optimum is a valid lower bound on the MIP:
+                    # certify only when rounding provably lost < gap
+                    z_lp = lp.dual_bound if lp.dual_bound is not None \
+                        else lp.obj
+                    if (z_r - z_lp) <= ACCEPT_GAP * max(abs(z_lp), 1e-9) \
+                            or mode == "rounded_lp":
+                        return self._finish(v_r, None, s_r, z_r, tokens,
+                                            cur, p, t0, n_vars_full,
+                                            solver_s, "rounded_lp")
+
+            # ---- tier 3: monolithic MIP, warm-started ----------------
+            if mode in ("auto", "monolithic"):
+                x0 = None
+                if best is not None:
+                    bv = np.rint(best[0])
+                    x0 = np.concatenate([
+                        bv,
+                        self._k * self._v_obj * np.maximum(0.0, bv - cur),
+                        best[1]])
+                # corallint: disable=D1 - tier time budget only
+                rem = max(deadline - time.time(), min(p.time_limit, 1.0))
+                try:
+                    res = mdl.solve(time_limit=rem, gap=MIP_GAP,
+                                    incumbent=x0)
+                except Exception:
+                    res = None
+                if res is not None:
+                    solver_s += res.seconds     # count failures too
+                if res is not None and res.ok:
+                    return self._finish(res.x[:V], res.x[V:2 * V],
+                                        res.x[2 * V:], res.obj, tokens,
+                                        cur, p, t0, n_vars_full,
+                                        solver_s, "monolithic")
+
+        # ---- degradation ladder: every tier failed or timed out ------
+        if best is not None:
+            return self._finish(best[0], None, best[1], best[2], tokens,
+                                cur, p, t0, n_vars_full, solver_s,
+                                "fallback", fallback=True)
+        t_now = time.time()     # corallint: disable=D1 - telemetry only
+        return Allocation({}, {}, np.inf, 0.0,
+                          {(d.model, d.phase): d.tokens_per_s
+                           for d in p.demands},
+                          t_now - t0, n_vars_full, False,
+                          build_seconds=t_now - t0 - solver_s,
+                          solve_path="fallback", solver_seconds=solver_s)
 
     def _avail_rhs(self, avail: np.ndarray) -> np.ndarray:
         return avail[self._avail_rix, self._avail_cix]

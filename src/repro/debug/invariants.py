@@ -229,14 +229,19 @@ def check_holdings(held: Dict[Tuple[str, str], int],
 def check_epoch_metrics(m):
     """EpochMetrics sanity: non-negative accounting, goodput below
     throughput (SLO-ok tokens are a subset of all tokens)."""
-    for f in ("cost_per_hour", "init_cost", "solve_seconds"):
+    for f in ("cost_per_hour", "init_cost", "solve_seconds",
+              "assembly_ms", "solve_ms", "extract_ms"):
         v = getattr(m, f)
         if not math.isfinite(v) or v < -EPS:
             _fail(f"EpochMetrics.{f} = {v!r} (epoch {m.epoch})")
     for f in ("n_instances", "n_new", "n_drained", "n_preempted",
-              "n_failed", "n_restarted", "n_shed"):
+              "n_failed", "n_restarted", "n_shed", "n_mid_resolves"):
         if getattr(m, f) < 0:
             _fail(f"EpochMetrics.{f} = {getattr(m, f)} (epoch {m.epoch})")
+    if m.solve_path not in ("", "decomposed", "rounded_lp", "monolithic",
+                            "fallback"):
+        _fail(f"EpochMetrics.solve_path = {m.solve_path!r} "
+              f"(epoch {m.epoch})")
     for name in sorted(m.goodput):
         g, t = m.goodput[name], m.throughput.get(name, 0.0)
         if g < -EPS or t < -EPS:

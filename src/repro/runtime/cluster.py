@@ -91,6 +91,16 @@ class EpochMetrics:
     # last_good (solve failed outright, previous target kept) / kept
     # (trigger-gated skip) / none (failed with no previous target)
     alloc_source: str = "solved"
+    # solve-time breakdown of the epoch's allocator call (all zero when
+    # the solve was trigger-gated away) and the tier that produced the
+    # target, so scenarios and fault_bench can attribute regressions
+    assembly_ms: float = 0.0
+    solve_ms: float = 0.0               # pure solver time across tiers
+    extract_ms: float = 0.0
+    solve_path: str = ""    # decomposed|rounded_lp|monolithic|fallback|""
+    # event-driven re-solves run *inside* this epoch (availability
+    # events: detected failures, blocked restarts)
+    n_mid_resolves: int = 0
 
 
 @dataclass
@@ -129,6 +139,27 @@ class RunResult:
         if not self.epochs:
             return 0
         return sum(1 for e in self.epochs if e.recovering)
+
+    def solve_path_counts(self) -> Dict[str, int]:
+        """How many epoch solves each tier served (skips excluded)."""
+        out: Dict[str, int] = {}
+        for e in self.epochs:
+            if e.solve_path:
+                out[e.solve_path] = out.get(e.solve_path, 0) + 1
+        return out
+
+    def solve_ms_percentiles(self) -> Tuple[float, float]:
+        """(p50, p95) of per-epoch solver time, solved epochs only."""
+        xs = sorted(e.solve_ms for e in self.epochs if e.resolve_triggered)
+        if not xs:
+            return 0.0, 0.0
+
+        def pct(q: float) -> float:
+            return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+        return pct(0.50), pct(0.95)
+
+    def total_mid_resolves(self) -> int:
+        return sum(e.n_mid_resolves for e in self.epochs)
 
 
 AllocatorFn = Callable[[AllocProblem], Allocation]
@@ -187,6 +218,14 @@ class ClusterRuntime:
         self._fail_pending = 0          # detections since the last decide
         self._epoch_avail: Optional[Dict[Tuple[str, str], int]] = None
         self._injector = None
+        # mid-epoch (event-driven) re-solve wiring: run() installs the
+        # controller + the epoch's demand/raw-availability snapshots so
+        # availability events can trigger a solve inside the epoch
+        self._controller = None
+        self._epoch_demands: Optional[Sequence[Demand]] = None
+        self._epoch_raw_avail: Optional[Dict[Tuple[str, str], int]] = None
+        self._epoch_mid_resolves = 0
+        self._epoch_mid_drained = 0
 
     # ------------------------------------------------------------ helpers
     def _held_nodes(self) -> Dict[Tuple[str, str], int]:
@@ -321,6 +360,7 @@ class ClusterRuntime:
         # immediate replacement: the standing allocation still targets
         # this (region, template); do not wait for the next re-solve
         self._restart(inst)
+        self._maybe_mid_resolve()
         return inst
 
     # ----------------------------------------------- crash / detection
@@ -344,16 +384,62 @@ class ClusterRuntime:
         pol = self.restart_policy
         if pol is None:
             self._restart(inst)
+        elif pol.allow():
+            delay = pol.delay(key)
+            pol.note_restart(key)
+            if delay > 0.0:
+                self.sim.ev.push(self.sim.now + delay, self._restart, inst)
+            else:
+                self._restart(inst)
+        # else: restart budget exhausted — the failure-driven re-solve
+        # below (or the epoch-edge reconcile) heals it
+        self._maybe_mid_resolve()
+
+    def _maybe_mid_resolve(self):
+        """Sub-epoch trigger evaluation: ask the controller whether the
+        availability event that just fired (a detected failure, a
+        blocked restart) warrants re-solving *now* instead of at the
+        epoch edge — affordable since the decomposed tier made the
+        online solve sub-second.  A successful solve immediately
+        becomes the reconcile target, so replacement capacity is placed
+        mid-epoch (where ThunderServe's lightweight re-deployment wins
+        live)."""
+        ctl = self._controller
+        if ctl is None or not hasattr(ctl, "decide_event") \
+                or self._epoch_raw_avail is None \
+                or self._epoch_demands is None:
             return
-        if not pol.allow():
-            return      # restart budget exhausted: the epoch-edge
-            # reconcile (or the failure-triggered re-solve) heals it
-        delay = pol.delay(key)
-        pol.note_restart(key)
-        if delay > 0.0:
-            self.sim.ev.push(self.sim.now + delay, self._restart, inst)
+        n_held = sum(len([i for i in v if not i.dead and not i.draining])
+                     for v in self.running.values())
+        dec = ctl.decide_event(self.sim.now, 1, n_held)
+        if not dec.resolve:
+            return
+        raw = self._epoch_raw_avail
+        if self.spot_market:
+            avail = dict(raw)
         else:
-            self._restart(inst)
+            avail = dict(raw)           # we keep what we hold
+            for k, n in self._held_nodes().items():
+                avail[k] = avail.get(k, 0) + n
+        demands = self._epoch_demands
+        prob = AllocProblem(
+            self.regions, self.configs, avail, demands, self.library,
+            current=self._current_counts(), init_penalty_k=self.init_k,
+            time_limit=self.time_limit)
+        alloc = self.allocator_fn(prob)
+        self._epoch_mid_resolves += 1
+        if not alloc.ok or getattr(alloc, "fallback", False):
+            return      # a failed mid-epoch solve keeps the standing
+            # target; the epoch-edge decide() sees the losses anyway
+        if _inv.sanitize_enabled():
+            _inv.check_allocation(alloc, avail)
+        self._last_alloc = alloc
+        n_new, n_drained, init_cost = self.reconcile(
+            alloc, self._epoch_avail)
+        self._epoch_new += n_new
+        self._epoch_mid_drained += n_drained
+        self._epoch_init_cost += init_cost
+        ctl.notify_solved(demands, raw)
 
     def _restart(self, inst: SimInstance) -> Optional[SimInstance]:
         """Start a replacement for a failed instance, bounded by the
@@ -426,6 +512,7 @@ class ClusterRuntime:
         """
         rng = random.Random(seed)
         self._injector = fault_injector
+        self._controller = controller
         if demands_per_epoch is not None and estimator is not None:
             raise ValueError("pass oracle demands_per_epoch OR an "
                              "estimator, not both")
@@ -474,6 +561,11 @@ class ClusterRuntime:
             # mid-epoch restarts: the provider grants what exists, not
             # what a stale feed claims
             self._epoch_avail = rec_avail
+            # snapshots for the event-driven mid-epoch re-solve hook
+            self._epoch_demands = demands
+            self._epoch_raw_avail = raw
+            self._epoch_mid_resolves = 0
+            self._epoch_mid_drained = 0
             n_failed_detected = self._fail_pending
             self._fail_pending = 0
             if controller is not None:
@@ -500,6 +592,11 @@ class ClusterRuntime:
                 solver_failed = not alloc.ok \
                     or getattr(alloc, "fallback", False)
                 solve_s, unmet = alloc.solve_seconds, alloc.unmet
+                # breakdown captured before any fallback reassignment
+                solve_path = getattr(alloc, "solve_path", "monolithic")
+                assembly_ms = getattr(alloc, "build_seconds", 0.0) * 1e3
+                solve_ms = getattr(alloc, "solver_seconds", 0.0) * 1e3
+                extract_ms = getattr(alloc, "extract_seconds", 0.0) * 1e3
                 if not alloc.ok:
                     # bottom rungs of the degradation ladder: the solve
                     # failed outright (no incumbent to fall back on) —
@@ -542,6 +639,8 @@ class ClusterRuntime:
                 alloc = self._last_alloc
                 solve_s = 0.0
                 unmet = self._shortfall(alloc, demands)
+                solve_path = ""
+                assembly_ms = solve_ms = extract_ms = 0.0
             n_new, n_drained, init_cost = self.reconcile(alloc, rec_avail)
             self._epoch_new = 0
             self._epoch_init_cost = 0.0
@@ -577,6 +676,7 @@ class ClusterRuntime:
             if estimator is not None:
                 estimator.observe(self.sim, t0, t1)
             n_new += self._epoch_new
+            n_drained += self._epoch_mid_drained
             init_cost += self._epoch_init_cost
             # provisioning cost of the live cluster
             cfg = self.library.config_by_name
@@ -605,7 +705,10 @@ class ClusterRuntime:
                             or self._epoch_restarted > 0
                             or any(i.failed and not i.dead
                                    for i in self.sim.instances.values())),
-                alloc_source=alloc_source)
+                alloc_source=alloc_source,
+                assembly_ms=assembly_ms, solve_ms=solve_ms,
+                extract_ms=extract_ms, solve_path=solve_path,
+                n_mid_resolves=self._epoch_mid_resolves)
             if _inv.sanitize_enabled():
                 _inv.check_epoch_metrics(em)
             result.epochs.append(em)

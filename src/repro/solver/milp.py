@@ -147,30 +147,50 @@ class MilpModel:
 
     # ---------------------------------------------------------- backends
     def solve(self, time_limit: float = 120.0, gap: float = 1e-6,
-              backend: str = "auto"):
-        if backend == "numpy" or (backend == "auto" and not HAVE_SCIPY):
-            return self._solve_bb(time_limit)
-        return self._solve_scipy(time_limit, gap)
+              backend: str = "auto", incumbent: Optional[np.ndarray] = None,
+              relax: bool = False):
+        """Solve the model.
 
-    def _solve_scipy(self, time_limit: float, gap: float):
+        ``incumbent`` is an optional warm-start point: the numpy
+        branch-and-bound verifies it and, when feasible, prunes against
+        its objective from node zero; the scipy/HiGHS backend has no
+        warm-start API, so it is ignored there (callers still use it to
+        pre-tighten bounds).  ``relax=True`` solves the LP relaxation
+        (integrality dropped) on either backend — the result's
+        ``dual_bound`` then equals its objective, a valid lower bound
+        for the integer model.
+        """
+        if backend == "numpy" or (backend == "auto" and not HAVE_SCIPY):
+            return self._solve_bb(time_limit, incumbent=incumbent,
+                                  relax=relax)
+        return self._solve_scipy(time_limit, gap, relax=relax)
+
+    def _solve_scipy(self, time_limit: float, gap: float,
+                     relax: bool = False):
         # corallint: disable=D1 - solve-seconds telemetry only
         t0 = time.time()
         data, ri, ci = self._matrix()
         A = sparse.csr_matrix((data, (ri, ci)), shape=(len(self.rows), self.n))
         cons = LinearConstraint(A, np.array(self.row_lb), np.array(self.row_ub))
+        integrality = np.zeros(self.n, dtype=np.uint8) if relax \
+            else np.array(self.integer, dtype=np.uint8)
         res = milp(
             c=np.array(self.obj),
             constraints=cons,
-            integrality=np.array(self.integer, dtype=np.uint8),
+            integrality=integrality,
             bounds=Bounds(np.array(self.lb), np.array(self.ub)),
             options={"time_limit": time_limit, "mip_rel_gap": gap,
                      "presolve": True},
         )
         ok = res.status == 0 and res.x is not None
+        if relax:
+            dual = res.fun if ok else None
+        else:
+            dual = getattr(res, "mip_dual_bound", None)
         return SolveResult(ok, res.x if ok else None,
                            # corallint: disable=D1 - telemetry only
                            res.fun if ok else np.inf, time.time() - t0,
-                           res.status)
+                           res.status, dual_bound=dual)
 
     # -------------------------------------------- numpy branch-and-bound
     def _lp_relax(self, extra_lb, extra_ub):
@@ -216,12 +236,43 @@ class MilpModel:
             return None, np.inf
         return y + shift, obj + np.dot(self.obj, shift)
 
-    def _solve_bb(self, time_limit: float):
+    def _check_feasible(self, x: np.ndarray, tol: float = 1e-6) -> bool:
+        """Bounds + rows + integrality check of a candidate point."""
+        if x is None or len(x) != self.n:
+            return False
+        x = np.asarray(x, dtype=float)
+        if np.any(x < np.array(self.lb) - tol) \
+                or np.any(x > np.array(self.ub) + tol):
+            return False
+        for j, is_int in enumerate(self.integer):
+            if is_int and abs(x[j] - round(x[j])) > tol:
+                return False
+        for row, l, u in zip(self.rows, self.row_lb, self.row_ub):
+            a = sum(v * x[j] for j, v in row.items())
+            if a < l - tol or a > u + tol:
+                return False
+        return True
+
+    def _solve_bb(self, time_limit: float,
+                  incumbent: Optional[np.ndarray] = None,
+                  relax: bool = False):
         # corallint: disable=D1 - deadline clock, see below
         t0 = time.time()
         self._densify()
-        best_x, best_obj = None, np.inf
         n = self.n
+        if relax:
+            x, obj = self._lp_relax(np.full(n, -np.inf), np.full(n, np.inf))
+            ok = x is not None
+            t_s = time.time() - t0  # corallint: disable=D1 - telemetry only
+            return SolveResult(ok, x, obj if ok else np.inf,
+                               t_s, 0 if ok else 2,
+                               dual_bound=obj if ok else None)
+        best_x, best_obj = None, np.inf
+        if incumbent is not None and self._check_feasible(incumbent):
+            # bound pruning from node zero: the warm start's objective
+            # is a valid upper bound before the first relaxation runs
+            best_x = np.asarray(incumbent, dtype=float).copy()
+            best_obj = float(np.dot(self.obj, best_x))
         stack = [(np.full(n, -np.inf), np.full(n, np.inf))]
         # deadline-bounded search is inherently wall-clock; callers
         # treat a timeout like a failed solve (Allocation.fallback)
@@ -249,9 +300,12 @@ class MilpModel:
             stack.append((l1, u1))
             stack.append((l2, u2))
         ok = best_x is not None
+        # an exhausted stack proves optimality (within the node pruning
+        # tolerance); a deadline exit leaves the bound unknown
+        dual = best_obj if ok and not stack else None
         # corallint: disable=D1 - telemetry only
         return SolveResult(ok, best_x, best_obj, time.time() - t0,
-                           0 if ok else 2)
+                           0 if ok else 2, dual_bound=dual)
 
 
 @dataclass
@@ -261,6 +315,10 @@ class SolveResult:
     obj: float
     seconds: float
     status: int
+    # valid lower bound on the integer optimum when the backend proved
+    # one (HiGHS' MIP dual bound / an exhausted numpy search / the LP
+    # relaxation's own objective); None when unknown
+    dual_bound: Optional[float] = None
 
 
 def _simplex_min(c, A, b) -> Tuple[Optional[np.ndarray], float]:

@@ -206,14 +206,17 @@ def test_state_rebuilds_when_empty_pair_fills():
 def test_incumbent_fallback_on_solver_failure(monkeypatch):
     """When HiGHS fails/times out mid-run, the state returns the
     previous epoch's solution clamped to the new availability instead
-    of an empty allocation."""
+    of an empty allocation.  Forced to the monolithic tier: in auto
+    mode the decomposed tier would succeed without ever touching
+    ``MilpModel`` (that resilience has its own ladder test below)."""
     from repro.solver.milp import MilpModel, SolveResult
     state = AllocatorState()
     avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
     demands = _demands(600.0)
     a1 = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
-                            LIB, time_limit=30))
+                            LIB, time_limit=30, solve_mode="monolithic"))
     assert a1.ok and a1.instances and not a1.fallback
+    assert a1.solve_path == "monolithic"
 
     def fail(self, **kw):
         return SolveResult(False, None, np.inf, 0.0, 2)
@@ -221,13 +224,99 @@ def test_incumbent_fallback_on_solver_failure(monkeypatch):
     # availability tightens: the incumbent must be clamped + repaired
     tight = {k: max(v - 15, 0) for k, v in avail.items()}
     a2 = state(AllocProblem(CORE_REGIONS, CONFIGS, tight, demands, LIB,
-                            current=dict(a1.instances), time_limit=30))
-    assert a2.ok and a2.fallback
+                            current=dict(a1.instances), time_limit=30,
+                            solve_mode="monolithic"))
+    assert a2.ok and a2.fallback and a2.solve_path == "fallback"
     _check_alloc(a2, tight, demands)    # clamped incumbent is feasible
     # a fresh state has no incumbent: failure surfaces as ok=False
     a3 = AllocatorState()(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
-                                       demands, LIB, time_limit=30))
+                                       demands, LIB, time_limit=30,
+                                       solve_mode="monolithic"))
     assert not a3.ok and not a3.instances
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 30), st.floats(150, 2500))
+def test_solve_tiers_agree_randomized(seed, abundance, dec_demand):
+    """Optimality-equivalence harness across the three solve tiers.
+
+    The auto ladder must land within the accept gap of the forced
+    monolithic optimum (it only returns a fast tier when *certified*);
+    the forced fast tiers must stay feasible and, being feasible, can
+    never beat the exact optimum by more than the solver gap."""
+    rng = np.random.default_rng(seed)
+    avail = {(r.name, c.name): int(rng.integers(0, abundance))
+             for r in CORE_REGIONS for c in CONFIGS}
+    demands = _demands(dec_demand)
+
+    def run(mode):
+        return allocate(AllocProblem(
+            CORE_REGIONS, CONFIGS, dict(avail), demands, LIB,
+            time_limit=30, solve_mode=mode))
+
+    mono = run("monolithic")
+    assert mono.ok and mono.solve_path == "monolithic"
+    auto = run("auto")
+    assert auto.ok and not auto.fallback
+    rel = abs(auto.objective - mono.objective) \
+        / max(abs(mono.objective), 1e-9)
+    assert rel <= 5e-4, (auto.solve_path, auto.objective, mono.objective)
+    _check_alloc(auto, avail, demands)
+    for mode in ("decomposed", "rounded_lp"):
+        a = run(mode)
+        if not a.ok:          # forced tier may fail where auto escalates
+            continue
+        assert a.solve_path in (mode, "fallback")
+        _check_alloc(a, avail, demands)
+        assert a.objective >= mono.objective - 5e-4 * abs(mono.objective) \
+            - 1e-6, (mode, a.objective, mono.objective)
+
+
+def test_degradation_ladder(monkeypatch):
+    """Price-loop non-convergence (or a crash) must escalate to the
+    monolithic solve; with *every* solver broken the state falls back
+    to the incumbent, then to a not-ok Allocation — never raising."""
+    from repro.solver import decompose
+    from repro.solver.milp import MilpModel
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    demands = _demands(700.0)
+
+    def prob(mode="auto", current=None):
+        return AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
+                            LIB, current=dict(current or {}),
+                            time_limit=30, solve_mode=mode)
+
+    mono_obj = allocate(prob("monolithic")).objective
+
+    def boom(*a, **kw):
+        raise RuntimeError("decomposition blew up")
+    # rung 1: decomposed tier crashes -> auto escalates, same optimum
+    monkeypatch.setattr(decompose, "solve_decomposed", boom)
+    state = AllocatorState()
+    a1 = state(prob())
+    assert a1.ok and not a1.fallback
+    assert a1.solve_path in ("rounded_lp", "monolithic")
+    rel = abs(a1.objective - mono_obj) / max(abs(mono_obj), 1e-9)
+    assert rel <= 5e-4
+    # rung 2: every solver broken, warm state -> incumbent fallback
+    monkeypatch.setattr(MilpModel, "solve", boom)
+    a2 = state(prob(current=a1.instances))
+    assert a2.ok and a2.fallback and a2.solve_path == "fallback"
+    _check_alloc(a2, avail, demands)
+    # rung 3: every solver broken, cold state -> not-ok, no exception
+    a3 = AllocatorState()(prob())
+    assert not a3.ok and not a3.instances and a3.solve_path == "fallback"
+
+
+def test_solve_time_breakdown_reported():
+    """Every successful solve stamps the path + time breakdown the
+    runtime's EpochMetrics aggregates."""
+    avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+    a = allocate(AllocProblem(CORE_REGIONS, CONFIGS, avail, _demands(500.0),
+                              LIB, time_limit=30))
+    assert a.solve_path in ("decomposed", "rounded_lp", "monolithic")
+    assert a.solver_seconds >= 0.0 and a.extract_seconds >= 0.0
+    assert a.solve_seconds >= a.solver_seconds + a.extract_seconds - 1e-6
 
 
 def test_scarce_availability_reports_unmet():

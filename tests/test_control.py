@@ -175,6 +175,44 @@ def test_controller_fires_on_availability_delta():
     assert dec.resolve and dec.reason == "avail_delta"
 
 
+def test_controller_decide_event_fires_on_accumulated_losses():
+    """Sub-epoch hook: losses accumulate across events and fire once
+    they reach the configured fraction of the held fleet."""
+    cfg = ControllerConfig(event_loss_frac=0.25, max_mid_resolves=2,
+                           min_event_gap_s=30.0)
+    c = ReSolveController(cfg)
+    # no standing solve yet: the epoch loop owns the first solve
+    assert not c.decide_event(10.0, 5, 10).resolve
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)     # absorbs prior losses
+    d = c.decide_event(100.0, 1, 10)            # 1 < 2.5 of 10 held
+    assert not d.resolve and d.reason == "steady"
+    d = c.decide_event(105.0, 2, 10)            # 3 >= 2.5: fire
+    assert d.resolve and d.reason == "event"
+    c.notify_solved(_demands(100.0), AVAIL)
+
+
+def test_controller_decide_event_throttles():
+    """The mid-epoch path is rate-limited: min spacing in simulated
+    time, and a per-epoch re-solve budget reset by ``decide``."""
+    cfg = ControllerConfig(event_loss_frac=0.1, max_mid_resolves=2,
+                           min_event_gap_s=30.0)
+    c = ReSolveController(cfg)
+    c.decide(0, _demands(100.0), AVAIL)
+    c.notify_solved(_demands(100.0), AVAIL)
+    assert c.decide_event(100.0, 5, 10).resolve
+    # too close to the last mid-epoch solve
+    d = c.decide_event(110.0, 5, 10)
+    assert not d.resolve and d.reason == "cooldown"
+    assert c.decide_event(140.0, 0, 10).resolve
+    # per-epoch budget exhausted
+    d = c.decide_event(200.0, 9, 10)
+    assert not d.resolve and d.reason == "cooldown"
+    # the next epoch's decide() refreshes the budget
+    c.decide(1, _demands(100.0), AVAIL)
+    assert c.decide_event(300.0, 0, 10).resolve
+
+
 # ---------------------------------------------------------- planner
 def test_transition_planner_prefers_cheapest_transition(
         phi4_runtime_library):
@@ -352,6 +390,36 @@ def test_fallback_solve_does_not_advance_controller(phi4_runtime_library):
     assert all(e.resolve_triggered for e in res.epochs)
     assert [e.solver_failed for e in res.epochs] == [False, True, True]
     assert len(notes) == 1
+
+
+def test_mid_epoch_event_resolve(phi4_runtime_library):
+    """A mid-epoch availability event (node failure) triggers an
+    event-driven re-solve *inside* the epoch, visible as
+    ``EpochMetrics.n_mid_resolves``, with the solve-time breakdown
+    populated on every solved epoch."""
+    from repro.traces.workloads import gen_requests
+    lib = phi4_runtime_library
+    rt = ClusterRuntime({M: MODEL}, CORE_REGIONS, CONFIGS, lib,
+                        AllocatorState(), WLS, epoch_s=180.0)
+    n = 4
+    reqs = gen_requests(M, MODEL.trace, 1.5, n * 180.0, seed=0)
+    avail = [{(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
+             for _ in range(n)]
+    ctrl = ReSolveController(ControllerConfig(
+        event_loss_frac=0.0, min_event_gap_s=0.0))
+    res = rt.run(reqs, avail, estimator=DemandEstimator([M], WLS),
+                 controller=ctrl, fail_rate_per_epoch=1.0, seed=3)
+    assert res.total_mid_resolves() > 0
+    assert any(e.n_mid_resolves > 0 for e in res.epochs)
+    for e in res.epochs:
+        if e.resolve_triggered and not e.solver_failed:
+            assert e.solve_path in ("decomposed", "rounded_lp",
+                                    "monolithic")
+            assert e.solve_ms >= 0.0 and e.assembly_ms >= 0.0
+    p50, p95 = res.solve_ms_percentiles()
+    assert 0.0 <= p50 <= p95
+    assert sum(res.solve_path_counts().values()) \
+        == sum(1 for e in res.epochs if e.solve_path)
 
 
 def test_runresult_guards_empty_and_counts_resolves():

@@ -113,6 +113,44 @@ def test_s1_flags_static_coo_shape_mismatch():
     assert _rules(src, "tests/test_solver.py", [SolverChecker]) == ["S1"]
 
 
+def test_s1_flags_unbounded_solve_on_epoch_paths():
+    src = ("mdl = MilpModel()\n"
+           "res = mdl.solve(gap=1e-4)\n")
+    assert _rules(src, "src/repro/core/allocator.py",
+                  [SolverChecker]) == ["S1"]
+
+
+def test_s1_flags_unbounded_chained_solve():
+    src = "res = MilpModel().solve()\n"
+    assert _rules(src, "src/repro/control/controller.py",
+                  [SolverChecker]) == ["S1"]
+
+
+def test_s1_allows_solve_with_time_limit_and_off_epoch_paths():
+    src = ("mdl = MilpModel()\n"
+           "res = mdl.solve(time_limit=rem, gap=1e-4)\n")
+    assert _rules(src, "src/repro/core/allocator.py", [SolverChecker]) == []
+    # outside S1 scope an unbounded solve is fine (unit tests, offline)
+    src2 = "res = MilpModel().solve()\n"
+    assert _rules(src2, "tests/test_solver.py", [SolverChecker]) == []
+
+
+def test_s1_solve_check_ignores_non_milp_objects():
+    src = ("cache = PlacementCache()\n"
+           "res = cache.solve(names)\n"
+           "mdl = MilpModel()\n"
+           "mdl = other_thing()\n"
+           "res = mdl.solve()\n")        # rebound away from MilpModel
+    assert _rules(src, "src/repro/core/allocator.py", [SolverChecker]) == []
+
+
+def test_s1_decompose_module_is_in_scope():
+    src = ("for r in rows:\n"
+           "    mdl.add_var(0.0)\n")
+    assert _rules(src, "src/repro/solver/decompose.py",
+                  [SolverChecker]) == ["S1"]
+
+
 # ------------------------------------------------------------------- P1
 def test_p1_flags_mutable_defaults():
     src = ("def f(xs=[]):\n"

@@ -441,7 +441,10 @@ def test_solver_timeout_returns_incumbent_fallback(phi4_runtime_library):
 def test_solver_crash_is_treated_as_timeout(phi4_runtime_library,
                                             monkeypatch):
     """A raising solver backend walks the same ladder as a timeout
-    instead of propagating into the epoch loop."""
+    instead of propagating into the epoch loop.  Forced monolithic: in
+    auto mode the decomposed tier (which never touches ``MilpModel``)
+    would simply absorb the crash — that resilience is covered by
+    tests/test_allocator.py::test_degradation_ladder."""
     from repro.solver.milp import MilpModel
     lib = phi4_runtime_library
     avail = {(r.name, c.name): 20 for r in CORE_REGIONS for c in CONFIGS}
@@ -449,7 +452,8 @@ def test_solver_crash_is_treated_as_timeout(phi4_runtime_library,
                Demand(MODEL.name, "decode", 2.0 * WL.avg_output)]
     state = AllocatorState()
     good = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail), demands,
-                              lib, time_limit=60.0))
+                              lib, time_limit=60.0,
+                              solve_mode="monolithic"))
     assert good.ok
 
     def boom(self, **kw):
@@ -457,6 +461,7 @@ def test_solver_crash_is_treated_as_timeout(phi4_runtime_library,
 
     monkeypatch.setattr(MilpModel, "solve", boom)
     alloc = state(AllocProblem(CORE_REGIONS, CONFIGS, dict(avail),
-                               demands, lib, time_limit=60.0))
+                               demands, lib, time_limit=60.0,
+                               solve_mode="monolithic"))
     assert alloc.ok and alloc.fallback
     assert alloc.instances == good.instances

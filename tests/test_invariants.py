@@ -157,8 +157,11 @@ class _Metrics:
     cost_per_hour = 1.0
     init_cost = 0.0
     solve_seconds = 0.1
+    assembly_ms = solve_ms = extract_ms = 0.0
+    solve_path = "decomposed"
     n_instances = n_new = n_drained = 0
     n_preempted = n_failed = n_restarted = n_shed = 0
+    n_mid_resolves = 0
     goodput = {"m": 5.0}
     throughput = {"m": 6.0}
     unmet = {}

@@ -74,6 +74,25 @@ def extract_metrics() -> Dict[str, float]:
             out[f"allocator_update_speedup_{tag}"] = r["update_speedup"]
             out[f"allocator_objective_ok_{tag}"] = \
                 1.0 if r.get("objective_ok") else 0.0
+        s = d.get("resolve_stream")
+        if s:
+            # three-tier online re-solve (decomposition PR): warm-epoch
+            # speedup ratios vs the forced-monolithic path plus the
+            # pinned-at-1.0 acceptance booleans (sub-second p50, stream
+            # objective parity)
+            out["allocator_resolve_speedup_p50"] = s["resolve_speedup_p50"]
+            out["allocator_resolve_speedup_p95"] = s["resolve_speedup_p95"]
+            out["allocator_resolve_sub_s_ext"] = \
+                1.0 if s.get("resolve_sub_s") else 0.0
+            out["allocator_stream_parity_ok"] = \
+                1.0 if s.get("parity_ok") else 0.0
+        e = d.get("escalation")
+        if e:
+            out["allocator_escalated"] = \
+                1.0 if e.get("escalation_ok") else 0.0
+        for r in d.get("scenario_parity", []):
+            out[f"allocator_parity_ok_{r['scenario']}"] = \
+                1.0 if r.get("parity_ok") else 0.0
     d = _load("BENCH_control_loop.json")
     if d:
         for r in d.get("results", []):

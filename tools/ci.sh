@@ -38,6 +38,11 @@ echo "== sanitize smoke (CORAL_SANITIZE=1, batched vs oracle) =="
 # asserting the span-batched loop stays bit-identical to the oracle
 CORAL_SANITIZE=1 python tools/sanitize_smoke.py
 
+echo "== decompose smoke (three-tier ladder vs monolithic, both backends) =="
+# core-scale auto-vs-monolithic objective parity on scipy/HiGHS plus a
+# var-capped instance on the pure-numpy branch-and-bound backend
+python tools/decompose_smoke.py
+
 echo "== bench smoke (${CI_BENCH}) =="
 python benchmarks/run.py --only "${CI_BENCH}"
 

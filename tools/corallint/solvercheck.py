@@ -8,6 +8,14 @@ oracle ``allocate_reference`` keeps them under an inline suppression).
 Also flags COO triplet calls whose (data, rows, cols) arguments are
 literals of statically-unequal lengths — a shape mismatch the solver
 would only surface at runtime as a scipy broadcast error.
+
+The decomposition PR added a third check: on epoch-loop paths every
+``MilpModel(...).solve(...)`` call must pass an explicit ``time_limit``
+keyword — an unbounded solve inside the online loop stalls the whole
+epoch cadence, and the three-tier escalation ladder relies on each
+tier respecting its slice of the deadline. Names bound via
+``name = MilpModel(...)`` are tracked per file so ``name.solve()`` is
+caught too, not just direct chaining.
 """
 from __future__ import annotations
 
@@ -21,7 +29,7 @@ PER_VAR_API = {"add_var", "add_constr"}
 # The offline placement solver, the milp wrapper's own internals, and
 # solver unit tests legitimately exercise the per-variable API.
 S1_DIRS = ("src/repro/core/allocator.py", "src/repro/runtime/",
-           "src/repro/control/")
+           "src/repro/control/", "src/repro/solver/decompose.py")
 
 
 class SolverChecker(Checker):
@@ -34,6 +42,25 @@ class SolverChecker(Checker):
         self._loop_depth = 0
         self._per_var_scope = any(ctx.relpath.startswith(d)
                                   for d in S1_DIRS)
+        self._milp_names = set()    # names bound via `x = MilpModel(...)`
+
+    @staticmethod
+    def _is_milp_ctor(node) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) \
+            else fn.id if isinstance(fn, ast.Name) else None
+        return name == "MilpModel"
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                if self._is_milp_ctor(node.value):
+                    self._milp_names.add(tgt.id)
+                else:
+                    self._milp_names.discard(tgt.id)    # rebound
+        self.generic_visit(node)
 
     def _visit_loop(self, node):
         self._loop_depth += 1
@@ -65,7 +92,20 @@ class SolverChecker(Checker):
                               "paths")
         if name == "add_constrs_coo":
             self._check_coo(node)
+        if name == "solve" and self._per_var_scope \
+                and isinstance(fn, ast.Attribute) \
+                and self._is_milp_target(fn.value) \
+                and not any(kw.arg == "time_limit"
+                            for kw in node.keywords):
+            self.report(node, "MilpModel.solve() without time_limit on "
+                              "an epoch-loop path — an unbounded solve "
+                              "stalls the online re-solve cadence")
         self.generic_visit(node)
+
+    def _is_milp_target(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self._milp_names
+        return self._is_milp_ctor(node)     # MilpModel(...).solve(...)
 
     def _check_coo(self, node: ast.Call):
         lens = []

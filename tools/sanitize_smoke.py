@@ -67,7 +67,8 @@ def _one_run(name, batched, models, regions, configs, wls, lib):
         "epochs": [(e.epoch, e.cost_per_hour, tuple(sorted(
             e.goodput.items())), tuple(sorted(e.throughput.items())),
             e.n_instances, e.n_new, e.n_drained, e.n_preempted,
-            e.n_failed, e.n_restarted, e.n_shed, e.alloc_source)
+            e.n_failed, e.n_restarted, e.n_shed, e.alloc_source,
+            e.solve_path)
             for e in res.epochs],
         "finished": sorted((r.rid, r.decode_tokens_ok, r.decode_slo_ok)
                            for r in sim.finished),
@@ -84,10 +85,12 @@ def main() -> int:
     models, configs, regions, wls = scenario(extended=False)
     lib = cached_library("core", models, configs, wls)
     failures = []
+    paths = set()
     for name in SMOKE_NAMES:
         t0 = time.time()
         batched = _one_run(name, True, models, regions, configs, wls, lib)
         oracle = _one_run(name, False, models, regions, configs, wls, lib)
+        paths.update(e[-1] for e in batched["epochs"])
         ok = batched == oracle
         print(f"sanitize_smoke: {name:18s} "
               f"{'bit-identical' if ok else 'MISMATCH'} "
@@ -100,8 +103,16 @@ def main() -> int:
     if failures:
         print(f"sanitize_smoke: FAILED for {failures}")
         return 1
+    # the three-tier solve ladder must have answered at least one epoch
+    # via the decomposed fast path with the sanitizer armed — the
+    # per-epoch check_allocation audit then covers its solutions too
+    if "decomposed" not in paths:
+        print(f"sanitize_smoke: decomposed tier never ran (paths seen: "
+              f"{sorted(paths)})")
+        return 1
     print(f"sanitize_smoke: {len(SMOKE_NAMES)} scenarios bit-identical "
-          "(batched vs oracle) under CORAL_SANITIZE=1")
+          f"(batched vs oracle) under CORAL_SANITIZE=1; solve paths "
+          f"{sorted(p for p in paths if p)}")
     return 0
 
 
