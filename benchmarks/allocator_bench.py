@@ -50,6 +50,9 @@ from benchmarks.common import (ART, Row, cached_library, make_avail,
 from repro.control.scenarios import SCENARIO_NAMES, make_scenario
 from repro.core.allocator import (AllocProblem, AllocatorState,
                                   allocate_reference)
+# shared nearest-rank semantics (bit-identical to the local helper
+# this replaced, so the pinned p50/p95 references are unchanged)
+from repro.obs.percentiles import percentile as _percentile
 
 # the paper-scale library is served from the artifacts cache; n_max=4
 # keeps a cold rebuild tolerable on this container while the ILP itself
@@ -130,11 +133,6 @@ def _bench(extended: bool) -> dict:
             f"vars={out['n_vars']};speedup={out['build_speedup']:.1f}x;"
             f"update={out['update_speedup']:.1f}x;obj_rel={rel:.1e}")
     return out
-
-
-def _percentile(xs, q):
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, round(q * (len(xs) - 1)))]
 
 
 def _rel(a, b):

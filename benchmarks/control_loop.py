@@ -125,6 +125,10 @@ def _one_run(mode, name, models, regions, configs, wls, lib):
         "resolves": res.n_resolves(),
         "preempted": sum(e.n_preempted for e in res.epochs),
         "reasons": [e.trigger_reason for e in res.epochs],
+        # per-model TTFT/TBT percentiles + SLO attainment over the
+        # post-warmup window (same exclusion as cost/coverage)
+        "slo": res.slo_report.window(WARMUP * EPOCH_S,
+                                     N_EPOCHS * EPOCH_S),
         "wall_s": wall,
     }, sc
 
@@ -154,6 +158,9 @@ def run() -> None:
             "goodput_parity": e["coverage"] / max(o["coverage"], 1e-9),
             "goodput_vs_static": e["coverage"] / max(s["coverage"], 1e-9),
             "resolve_savings": 1.0 - e["resolves"] / N_EPOCHS,
+            # closed-loop tail latency: the gate pins inverse p99 TTFT
+            # and SLO attainment per model (tools/check_bench.py)
+            "slo_est": e["slo"],
         }
         if name in ("flash_crowd", "spot_preemption") \
                 and row["goodput_vs_static"] <= 1.0:

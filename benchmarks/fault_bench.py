@@ -158,6 +158,11 @@ def _one_run(mode, name, models, regions, configs, wls, lib):
         "recovery_epochs": res.recovery_epochs(),
         "avg_cost": sum(e.cost_per_hour for e in res.epochs[WARMUP:])
         / max(len(res.epochs) - WARMUP, 1),
+        # per-model TTFT/TBT percentiles + SLO attainment over the
+        # post-warmup window: faults must show up as tail latency, not
+        # just coverage dips
+        "slo": res.slo_report.window(WARMUP * EPOCH_S,
+                                     N_EPOCHS * EPOCH_S),
         "wall_s": wall,
     }, sc, inj
 
@@ -197,6 +202,9 @@ def run() -> None:
             / max(hd["ttr_s"], WINDOW_S),
             "coverage_ratio": hd["coverage_post"]
             / max(nv["coverage_post"], 1e-9),
+            # hardened-discipline tail latency: the gate pins inverse
+            # p99 TTFT and SLO attainment per model (check_bench.py)
+            "slo_hardened": hd["slo"],
         }
         if name in ("crash_storm", "crash_loop") \
                 and row["recovery_speedup"] <= 1.0:

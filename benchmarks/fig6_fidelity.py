@@ -147,7 +147,7 @@ def run(n_requests: int = 24, seed: int = 0):
     for r in sim_reqs:
         sim.submit(r)
     sim.run_until(1e6)
-    sim_prefill = np.array(sim.prefill_lat[sm.name])
+    sim_prefill = np.asarray(sim.reqlog.ttft_values(sm.name))
     sim_total = np.array([r.finish - r.arrival for r in sim.finished])
 
     def dev(a, b):

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models import api as mapi
+from repro.obs.percentiles import percentiles
 from repro.serving.engine import JaxEngine
 
 ARCHS = ["qwen2-1.5b", "glm4-9b"]
@@ -61,6 +62,6 @@ for arch in ARCHS:
     rids = [r for r, (a, _) in sub_t.items() if a == arch and r in finished]
     ttft = [finished[r].prefill_done - sub_t[r][1] for r in rids]
     toks = sum(len(finished[r].out_tokens) for r in rids)
+    p50, p95 = percentiles(ttft, (0.50, 0.95))
     print(f"  {arch:12s} {len(rids):3d} reqs {toks:5d} tokens "
-          f"TTFT p50={np.percentile(ttft, 50)*1e3:.0f}ms "
-          f"p95={np.percentile(ttft, 95)*1e3:.0f}ms")
+          f"TTFT p50={p50*1e3:.0f}ms p95={p95*1e3:.0f}ms")

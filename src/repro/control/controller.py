@@ -71,6 +71,11 @@ class ReSolveController:
 
     def __init__(self, cfg: Optional[ControllerConfig] = None):
         self.cfg = cfg or ControllerConfig()
+        # observability: a repro.obs.TraceLog (and a sim-time clock
+        # callable), wired by ClusterRuntime.run; every decide() then
+        # emits a "trigger" record with its reason and drift readings
+        self.trace = None
+        self.clock = None
         self._ref_demand: Optional[Dict[Tuple[str, str], float]] = None
         self._ref_avail: Optional[Dict[Tuple[str, str], float]] = None
         self._since = 0
@@ -117,22 +122,40 @@ class ReSolveController:
                availability: Dict[Tuple[str, str], int],
                n_preempted: int = 0,
                n_failed: int = 0) -> ResolveDecision:
+        dec, dd, da = self._decide(demands, availability,
+                                   n_preempted, n_failed)
+        if self.trace is not None:
+            # drift readings are null on the emergency short-circuits
+            # (initial/preempted/failure), which fire before drifts
+            # are evaluated
+            self.trace.emit(
+                "trigger",
+                self.clock() if self.clock is not None else 0.0,
+                epoch, resolve=dec.resolve, reason=dec.reason,
+                demand_drift=dd, avail_delta=da)
+        return dec
+
+    def _decide(self, demands: Sequence[Demand],
+                availability: Dict[Tuple[str, str], int],
+                n_preempted: int, n_failed: int
+                ) -> Tuple[ResolveDecision, Optional[float],
+                           Optional[float]]:
         cfg = self.cfg
         self._since += 1
         self._mid_this_epoch = 0        # fresh mid-epoch budget
         if self._ref_demand is None:
-            return ResolveDecision(True, "initial")
+            return ResolveDecision(True, "initial"), None, None
         if n_preempted > 0:
             # lost held capacity is an emergency: reactive re-allocation
             # (ShuntServe's case for spot churn) overrides cooldown and
             # arming — the reconcile loop cannot replace nodes whose
             # supply is gone; only a re-solve can move the capacity
-            return ResolveDecision(True, "preempted")
+            return ResolveDecision(True, "preempted"), None, None
         if n_failed > 0:
             # detected node failures get the same emergency treatment:
             # the restart path may have been blocked (backoff, budget,
             # vanished availability), so re-place the lost capacity now
-            return ResolveDecision(True, "failure")
+            return ResolveDecision(True, "failure"), None, None
         dd = self.demand_drift(demands)
         da = self.avail_delta(availability)
         # Schmitt re-arming: a trigger that fired stays disarmed until
@@ -149,22 +172,22 @@ class ReSolveController:
             # trigger-level drift waits the cooldown out
             if fire_a and da >= cfg.emergency_mult * cfg.avail_up:
                 self._armed_avail = False
-                return ResolveDecision(True, "avail_delta")
+                return ResolveDecision(True, "avail_delta"), dd, da
             if fire_d and dd >= cfg.emergency_mult * cfg.drift_up:
                 self._armed_demand = False
-                return ResolveDecision(True, "demand_drift")
+                return ResolveDecision(True, "demand_drift"), dd, da
             return ResolveDecision(False,
                                    "cooldown" if (fire_d or fire_a)
-                                   else "steady")
+                                   else "steady"), dd, da
         if fire_d:
             self._armed_demand = False
-            return ResolveDecision(True, "demand_drift")
+            return ResolveDecision(True, "demand_drift"), dd, da
         if fire_a:
             self._armed_avail = False
-            return ResolveDecision(True, "avail_delta")
+            return ResolveDecision(True, "avail_delta"), dd, da
         if self._since >= cfg.max_interval_epochs:
-            return ResolveDecision(True, "cadence")
-        return ResolveDecision(False, "steady")
+            return ResolveDecision(True, "cadence"), dd, da
+        return ResolveDecision(False, "steady"), dd, da
 
     def decide_event(self, now: float, n_lost: int,
                      n_held: int) -> ResolveDecision:

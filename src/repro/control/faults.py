@@ -108,8 +108,13 @@ class FaultInjector:
         self._rng_restart = random.Random(seed ^ 0x9E3779B9)
         self._feed_hist: List[Dict] = []
         self._last_obs: Optional[Dict] = None
-        # observability: (t, kind, instance id) of every planned fault
+        # observability: (t, kind, instance id) of every planned fault,
+        # plus an optional repro.obs.TraceLog (wired by
+        # ClusterRuntime.run) that receives a "fault_inject" record per
+        # planned event — emitted at PLAN time, so its ``t`` is the
+        # *future* injection instant
         self.events: List[Tuple[float, str, int]] = []
+        self.trace = None
         self.first_fault_t: Optional[float] = None
         self._epoch = 0                 # advanced by plan_epoch
 
@@ -175,6 +180,9 @@ class FaultInjector:
         out.sort(key=lambda f: (f.t, f.inst.iid, f.kind))
         for f in out:
             self.events.append((f.t, f.kind, f.inst.iid))
+            if self.trace is not None:
+                self.trace.emit("fault_inject", f.t, epoch,
+                                fault=f.kind, iid=f.inst.iid)
             if self.first_fault_t is None:
                 self.first_fault_t = f.t
         return out

@@ -97,6 +97,37 @@ class SimSanitizer:
         self._check_occupancy(sim)
         self._check_tokens(sim)
         self._check_requests(sim)
+        self._check_reqlog(sim)
+
+    def _check_reqlog(self, sim):
+        """RequestLog conservation: the observability layer's per-model
+        outcome counters must mirror the simulator's own accounting
+        exactly (a divergence means a lifecycle note was missed or
+        double-recorded)."""
+        rl = sim.reqlog
+        if rl is None:
+            return
+        fin: Dict[str, int] = {}
+        for r in sim.finished:
+            fin[r.model] = fin.get(r.model, 0) + 1
+        for m in sorted(rl.models):
+            if rl.n_finished[m] != fin.get(m, 0):
+                _fail(f"RequestLog finished count {rl.n_finished[m]} != "
+                      f"simulator finished {fin.get(m, 0)} for {m!r}")
+            if rl.n_dropped[m] != sim.dropped_by_model.get(m, 0):
+                _fail(f"RequestLog dropped count {rl.n_dropped[m]} != "
+                      f"simulator dropped "
+                      f"{sim.dropped_by_model.get(m, 0)} for {m!r}")
+            if rl.n_shed[m] != sim.shed_by_model.get(m, 0):
+                _fail(f"RequestLog shed count {rl.n_shed[m]} != "
+                      f"simulator shed {sim.shed_by_model.get(m, 0)} "
+                      f"for {m!r}")
+            # every finished request passed its first-token stamp, but
+            # not vice versa (decode still in flight, or a request
+            # dropped after prefill at the decode-dispatch edge)
+            if rl.n_finished[m] > rl.n_first[m]:
+                _fail(f"RequestLog records {rl.n_finished[m]} finished "
+                      f"but only {rl.n_first[m]} first tokens for {m!r}")
 
     def _check_lifecycle(self, sim):
         for iid in sorted(sim.instances):
@@ -254,3 +285,20 @@ def check_epoch_metrics(m):
         if m.unmet[key] < -EPS:
             _fail(f"negative unmet demand {m.unmet[key]} for {key} "
                   f"(epoch {m.epoch})")
+    slo = getattr(m, "slo", None) or {}     # tolerate duck-typed stubs
+    for name in sorted(slo):
+        s = slo[name]
+        for f in sorted(s):
+            v = s[f]
+            if not math.isfinite(v) or v < -EPS:
+                _fail(f"EpochMetrics.slo[{name!r}][{f!r}] = {v!r} "
+                      f"(epoch {m.epoch})")
+        for fam in ("ttft", "tbt"):
+            if not (s[f"{fam}_p50"] <= s[f"{fam}_p95"] + EPS
+                    and s[f"{fam}_p95"] <= s[f"{fam}_p99"] + EPS):
+                _fail(f"non-monotone {fam} percentiles for {name!r} "
+                      f"(epoch {m.epoch}): p50={s[f'{fam}_p50']} "
+                      f"p95={s[f'{fam}_p95']} p99={s[f'{fam}_p99']}")
+            if s[f"{fam}_attain"] > 1.0 + EPS:
+                _fail(f"{fam} SLO attainment {s[f'{fam}_attain']} > 1 "
+                      f"for {name!r} (epoch {m.epoch})")

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.models import api as mapi
+from repro.obs.percentiles import percentiles
 from repro.serving.engine import JaxEngine
 
 
@@ -57,11 +58,13 @@ def serve(cfg, n_requests: int = 32, rate: float = 5.0, max_batch: int = 8,
     total_tokens = sum(len(r.out_tokens) for r in finished.values())
     print(f"[serve] {n_requests} requests, {total_tokens} tokens "
           f"in {wall:.1f}s -> {total_tokens / wall:.1f} tok/s")
-    print(f"[serve] TTFT   p50={np.percentile(lat_first, 50)*1e3:.1f}ms "
-          f"p95={np.percentile(lat_first, 95)*1e3:.1f}ms")
+    # repro.obs nearest-rank percentiles: the same semantics the
+    # simulator's SLOReport uses, so engine and sim numbers line up
+    f50, f95 = percentiles(lat_first, (0.50, 0.95))
+    print(f"[serve] TTFT   p50={f50*1e3:.1f}ms p95={f95*1e3:.1f}ms")
     if lat_token:
-        print(f"[serve] TPOT   p50={np.percentile(lat_token, 50)*1e3:.1f}ms "
-              f"p95={np.percentile(lat_token, 95)*1e3:.1f}ms")
+        t50, t95 = percentiles(lat_token, (0.50, 0.95))
+        print(f"[serve] TPOT   p50={t50*1e3:.1f}ms p95={t95*1e3:.1f}ms")
     return finished
 
 

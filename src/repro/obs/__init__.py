@@ -1,0 +1,20 @@
+"""Coral observability layer: shared percentile semantics,
+per-request SLO latency records and structured control-plane tracing.
+
+Everything in this package is observation-only — importing or enabling
+it never changes a simulation outcome (the batched-vs-oracle gauntlet
+runs with it on).
+"""
+from repro.obs.percentiles import (percentile, percentiles,
+                                   weighted_percentile,
+                                   weighted_percentiles)
+from repro.obs.reqlog import (QS, RequestLog, SLOReport, SLOTargets)
+from repro.obs.trace import TRACE_SCHEMA, TraceError, TraceLog, \
+    validate_record
+
+__all__ = [
+    "percentile", "percentiles", "weighted_percentile",
+    "weighted_percentiles", "QS", "RequestLog", "SLOReport",
+    "SLOTargets", "TRACE_SCHEMA", "TraceError", "TraceLog",
+    "validate_record",
+]

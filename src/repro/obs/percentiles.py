@@ -1,0 +1,73 @@
+"""Shared percentile semantics for every latency/solve-time summary.
+
+One definition, used by ``RunResult.solve_ms_percentiles``, the
+``SLOReport`` TTFT/TBT summaries, the allocator resolve-stream bench
+and the real-engine launcher prints — so simulator and engine SLO
+numbers are computed identically.
+
+Semantics: **nearest-rank with round-half-even** over the sorted
+samples — ``sorted(xs)[round(q * (n - 1))]`` for ``q`` in ``[0, 1]``.
+Every reported percentile is therefore an *observed* sample (a p99
+latency someone actually experienced), never an interpolated value
+between two samples; this matches the two pre-existing nearest-rank
+implementations bit-for-bit, so porting them here changed no pinned
+benchmark reference.
+
+``weighted_percentile`` extends the same rule to run-length-compressed
+samples: it returns exactly ``percentile(np.repeat(values, weights),
+q)`` without materializing the expansion — the bridge from the
+simulator's ``TokenRuns`` records (one record per span segment, weight
+``k * b`` tokens) to token-level time-between-token percentiles.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence, Tuple
+
+import numpy as np
+
+
+def percentile(xs: Iterable[float], q: float) -> float:
+    """Nearest-rank percentile of ``xs`` at fraction ``q`` in [0, 1]."""
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    return float(xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))])
+
+
+def percentiles(xs: Iterable[float],
+                qs: Sequence[float]) -> Tuple[float, ...]:
+    """``percentile`` at several fractions with a single sort."""
+    xs = sorted(xs)
+    if not xs:
+        return tuple(0.0 for _ in qs)
+    top = len(xs) - 1
+    return tuple(float(xs[min(top, int(round(q * top)))]) for q in qs)
+
+
+def weighted_percentiles(values, weights,
+                         qs: Sequence[float]) -> Tuple[float, ...]:
+    """Nearest-rank percentiles of the run-length expansion
+    ``np.repeat(values, weights)`` — computed from the compressed form.
+
+    ``weights`` are positive integer multiplicities.  Exactly
+    equivalent to ``percentiles(np.repeat(values, weights), qs)``
+    (property-tested in tests/test_obs.py)."""
+    v = np.asarray(values, dtype=float)
+    w = np.asarray(weights, dtype=np.int64)
+    if v.size == 0 or int(w.sum()) == 0:
+        return tuple(0.0 for _ in qs)
+    order = np.argsort(v, kind="stable")
+    v = v[order]
+    cw = np.cumsum(w[order])
+    top = int(cw[-1]) - 1
+    out = []
+    for q in qs:
+        h = min(top, int(round(q * top)))
+        # first compressed entry whose cumulative weight exceeds the
+        # expanded index h — the sample the expansion would hold there
+        out.append(float(v[int(np.searchsorted(cw, h, side="right"))]))
+    return tuple(out)
+
+
+def weighted_percentile(values, weights, q: float) -> float:
+    return weighted_percentiles(values, weights, (q,))[0]

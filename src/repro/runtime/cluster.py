@@ -47,6 +47,8 @@ from repro.core.hardware import NodeConfig, Region
 from repro.debug import invariants as _inv
 from repro.core.modelspec import ServedModel
 from repro.core.templates import TemplateLibrary
+from repro.obs.percentiles import percentiles as _percentiles
+from repro.obs.reqlog import SLOReport, SLOTargets
 from repro.simulator.sim import INIT_DELAY_S, SimInstance, Simulator
 from repro.traces.workloads import Request
 
@@ -101,11 +103,18 @@ class EpochMetrics:
     # event-driven re-solves run *inside* this epoch (availability
     # events: detected failures, blocked restarts)
     n_mid_resolves: int = 0
+    # per-model SLO latency summary for the epoch window (repro.obs):
+    # model -> {ttft_p50/p95/p99, tbt_p50/p95/p99, ttft_attain,
+    # tbt_attain, n_ttft, n_tbt_tokens}
+    slo: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
 
 @dataclass
 class RunResult:
     epochs: List[EpochMetrics] = field(default_factory=list)
+    # the run's SLOReport, for arbitrary-window / tail-series queries
+    # beyond the per-epoch EpochMetrics.slo summaries
+    slo_report: Optional[SLOReport] = None
 
     def avg_cost(self) -> float:
         if not self.epochs:
@@ -149,14 +158,11 @@ class RunResult:
         return out
 
     def solve_ms_percentiles(self) -> Tuple[float, float]:
-        """(p50, p95) of per-epoch solver time, solved epochs only."""
-        xs = sorted(e.solve_ms for e in self.epochs if e.resolve_triggered)
-        if not xs:
-            return 0.0, 0.0
-
-        def pct(q: float) -> float:
-            return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
-        return pct(0.50), pct(0.95)
+        """(p50, p95) of per-epoch solver time, solved epochs only
+        (obs.percentiles nearest-rank semantics)."""
+        return _percentiles(
+            (e.solve_ms for e in self.epochs if e.resolve_triggered),
+            (0.50, 0.95))
 
     def total_mid_resolves(self) -> int:
         return sum(e.n_mid_resolves for e in self.epochs)
@@ -174,7 +180,7 @@ class ClusterRuntime:
                  allocator_time_limit: float = 60.0,
                  sim_batched: bool = True, spot_market: bool = False,
                  health_check_s: float = 0.0, restart_policy=None,
-                 shed_policy=None):
+                 shed_policy=None, trace=None, slo_targets=None):
         self.models = models
         self.regions = regions
         self.configs = configs
@@ -202,6 +208,14 @@ class ClusterRuntime:
                              batched=sim_batched)
         if shed_policy is not None:     # admission control / load shed
             self.sim.shed_policy = shed_policy
+        # observability (repro.obs): structured control-plane tracing
+        # (a TraceLog, or None for no tracing) and the run's SLO
+        # report over the simulator's request/token records
+        self.trace = trace
+        self.slo = SLOReport(self.sim.reqlog, self.sim.tokens,
+                             slo_targets if slo_targets is not None
+                             else SLOTargets.from_models(models))
+        self._epoch_idx = 0             # current epoch, for trace records
         self.region_by_name: Dict[str, Region] = {r.name: r for r in regions}
         self.running: Dict[Tuple[str, Tuple], List[SimInstance]] = {}
         # last successful allocation, kept as the target when a later
@@ -228,6 +242,12 @@ class ClusterRuntime:
         self._epoch_mid_drained = 0
 
     # ------------------------------------------------------------ helpers
+    def _emit(self, kind: str, **fields):
+        """Trace a control-plane event at the simulator's current time
+        in the current epoch (no-op without a TraceLog)."""
+        if self.trace is not None:
+            self.trace.emit(kind, self.sim.now, self._epoch_idx, **fields)
+
     def _held_nodes(self) -> Dict[Tuple[str, str], int]:
         held: Dict[Tuple[str, str], int] = {}
         for (region, key), insts in self.running.items():
@@ -316,6 +336,8 @@ class ClusterRuntime:
             victim = min(cands,
                          key=lambda i: len(i.queue) + len(i.resident))
             self.sim.kill_instance(victim)
+            self._emit("preempt", iid=victim.iid, region=victim.region,
+                       model=victim.template.model)
             killed += 1
 
     def _shortfall(self, alloc: Allocation,
@@ -355,6 +377,11 @@ class ClusterRuntime:
         # queued for admission — both already prefilled) rejoin the
         # decode pool via _join_decode, never back through prefill
         self.sim.kill_instance(inst)
+        # the legacy fail_rate path bypasses the injector and the
+        # health probe: trace the injection and its instant detection
+        # here so every restart still follows a detect
+        self._emit("fault_inject", fault="crash", iid=inst.iid)
+        self._emit("fault_detect", iid=inst.iid, detect_lag_s=0.0)
         self._epoch_failed += 1
         self._epoch_failed_keys.add((inst.region, inst.template.key))
         # immediate replacement: the standing allocation still targets
@@ -381,6 +408,8 @@ class ClusterRuntime:
         self._fail_pending += 1
         key = (inst.region, inst.template.key)
         self._epoch_failed_keys.add(key)
+        self._emit("fault_detect", iid=inst.iid,
+                   detect_lag_s=max(self.health_check_s, 0.0))
         pol = self.restart_policy
         if pol is None:
             self._restart(inst)
@@ -391,8 +420,11 @@ class ClusterRuntime:
                 self.sim.ev.push(self.sim.now + delay, self._restart, inst)
             else:
                 self._restart(inst)
-        # else: restart budget exhausted — the failure-driven re-solve
-        # below (or the epoch-edge reconcile) heals it
+        else:
+            # restart budget exhausted — the failure-driven re-solve
+            # below (or the epoch-edge reconcile) heals it
+            self._emit("restart", for_iid=inst.iid,
+                       outcome="budget_exhausted")
         self._maybe_mid_resolve()
 
     def _maybe_mid_resolve(self):
@@ -428,6 +460,10 @@ class ClusterRuntime:
             time_limit=self.time_limit)
         alloc = self.allocator_fn(prob)
         self._epoch_mid_resolves += 1
+        self._emit("mid_resolve", reason="availability_event",
+                   solve_ms=getattr(alloc, "solver_seconds", 0.0) * 1e3,
+                   ok=bool(alloc.ok
+                           and not getattr(alloc, "fallback", False)))
         if not alloc.ok or getattr(alloc, "fallback", False):
             return      # a failed mid-epoch solve keeps the standing
             # target; the epoch-edge decide() sees the losses anyway
@@ -448,6 +484,7 @@ class ClusterRuntime:
         if not self._restart_fits(inst.region, inst.template):
             # the capacity is gone (e.g. fully-reclaimed spot supply):
             # only a re-solve can move the load somewhere that exists
+            self._emit("restart", for_iid=inst.iid, outcome="blocked")
             return None
         key = (inst.region, inst.template.key)
         repl = self.sim.add_instance(inst.region, inst.template)
@@ -457,10 +494,19 @@ class ClusterRuntime:
         self._epoch_restarted += 1
         self._epoch_init_cost += inst.template.cost(
             region, self.library.config_by_name) * self.init_k
+        self._emit("restart", for_iid=inst.iid, outcome="started",
+                   new_iid=repl.iid, ready_at=repl.ready_at)
         if self._injector is not None:
             flake = self._injector.restart_outcome()
             if flake is not None:       # crash loop: it dies again
                 self.sim.ev.push(repl.ready_at + flake, self._crash, repl)
+                if self.trace is not None:
+                    # planned like the injector's records: t is the
+                    # *future* re-crash time of the flaky replacement
+                    self.trace.emit("fault_inject",
+                                    repl.ready_at + flake,
+                                    self._epoch_idx, fault="flake",
+                                    iid=repl.iid)
         return repl
 
     def _restart_fits(self, region_name: str, template) -> bool:
@@ -513,6 +559,17 @@ class ClusterRuntime:
         rng = random.Random(seed)
         self._injector = fault_injector
         self._controller = controller
+        # hand the control-plane components this run's TraceLog unless
+        # the caller already wired their own
+        if self.trace is not None:
+            if controller is not None \
+                    and getattr(controller, "trace", None) is None:
+                controller.trace = self.trace
+                if getattr(controller, "clock", None) is None:
+                    controller.clock = lambda: self.sim.now
+            if fault_injector is not None \
+                    and getattr(fault_injector, "trace", None) is None:
+                fault_injector.trace = self.trace
         if demands_per_epoch is not None and estimator is not None:
             raise ValueError("pass oracle demands_per_epoch OR an "
                              "estimator, not both")
@@ -526,6 +583,7 @@ class ClusterRuntime:
         can_warm = planner is not None \
             and hasattr(self.allocator_fn, "set_incumbent")
         for e in range(n_epochs):
+            self._epoch_idx = e
             t0 = e * self.epoch_s
             t1 = t0 + self.epoch_s
             if estimator is not None:
@@ -574,9 +632,14 @@ class ClusterRuntime:
                                              n_failed=n_failed_detected)
                 resolve, reason = decision.resolve, decision.reason
             else:
+                # no controller: fixed every-epoch cadence — the
+                # runtime traces the decision itself (a controller
+                # emits its own trigger records from decide())
                 resolve, reason = True, "epoch"
+                self._emit("trigger", resolve=True, reason="epoch")
             if not resolve and self._last_alloc is None:
                 resolve, reason = True, "bootstrap"
+                self._emit("trigger", resolve=True, reason="bootstrap")
             solver_failed = False
             alloc_source = "kept"
             if resolve:
@@ -641,7 +704,18 @@ class ClusterRuntime:
                 unmet = self._shortfall(alloc, demands)
                 solve_path = ""
                 assembly_ms = solve_ms = extract_ms = 0.0
+            if resolve:
+                self._emit("solve", path=solve_path, solve_ms=solve_ms,
+                           assembly_ms=assembly_ms,
+                           extract_ms=extract_ms, total_ms=solve_s * 1e3,
+                           alloc_source=alloc_source,
+                           solver_failed=solver_failed)
             n_new, n_drained, init_cost = self.reconcile(alloc, rec_avail)
+            self._emit("reconcile", n_new=n_new, n_drained=n_drained,
+                       n_kept=max(
+                           len([i for i in self.sim.instances.values()
+                                if not i.dead and not i.draining])
+                           - n_new, 0))
             self._epoch_new = 0
             self._epoch_init_cost = 0.0
             self._epoch_failed = 0
@@ -708,8 +782,10 @@ class ClusterRuntime:
                 alloc_source=alloc_source,
                 assembly_ms=assembly_ms, solve_ms=solve_ms,
                 extract_ms=extract_ms, solve_path=solve_path,
-                n_mid_resolves=self._epoch_mid_resolves)
+                n_mid_resolves=self._epoch_mid_resolves,
+                slo=self.slo.window(t0, t1))
             if _inv.sanitize_enabled():
                 _inv.check_epoch_metrics(em)
             result.epochs.append(em)
+        result.slo_report = self.slo
         return result

@@ -59,6 +59,7 @@ from repro.core.hardware import NodeConfig, Region
 from repro.core.modelspec import ServedModel
 from repro.core.templates import ServingTemplate
 from repro.debug import invariants as _inv
+from repro.obs.reqlog import RequestLog
 from repro.simulator.costmodel import InstanceCostModel
 from repro.traces.workloads import Request
 
@@ -168,6 +169,42 @@ class TokenRuns:
                     c += 1
             total += c * int(b[i])
         return total
+
+    def gap_samples(self, q0: float,
+                    q1: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Time-between-tokens samples for boundaries in [q0, q1), in
+        run-length form: (iteration gaps, token weights).  Each run
+        contributes its ``dt`` weighted by the tokens whose boundary
+        falls inside the window (``k * b`` for fully-covered runs;
+        straddlers expand boundary-by-boundary like ``count``).  Feeds
+        ``obs.weighted_percentiles`` for token-level TBT percentiles
+        with zero per-token bookkeeping."""
+        if not self._t0:
+            return (np.empty(0, dtype=float),
+                    np.empty(0, dtype=np.int64))
+        t0, dt, k, b, ok, end = self._arrays()
+        first = t0 + dt
+        hit = (end >= q0) & (first < q1)
+        full = hit & (first >= q0) & (end < q1)
+        part_v: List[float] = []
+        part_w: List[int] = []
+        for i in np.nonzero(hit & ~full)[0]:
+            t, c = t0[i], 0
+            for _ in range(int(k[i])):
+                t = t + dt[i]
+                if t >= q1:
+                    break
+                if t >= q0:
+                    c += 1
+            if c:
+                part_v.append(float(dt[i]))
+                part_w.append(c * int(b[i]))
+        vals = np.concatenate(
+            [dt[full], np.asarray(part_v, dtype=float)])
+        wts = np.concatenate(
+            [(k[full] * b[full]).astype(np.int64),
+             np.asarray(part_w, dtype=np.int64)])
+        return vals, wts
 
 
 class _ObsLog:
@@ -327,7 +364,8 @@ class Simulator:
     def __init__(self, models: Dict[str, ServedModel],
                  config_by_name: Dict[str, NodeConfig],
                  workloads: Dict[str, "WorkloadStats"],
-                 batched: bool = True):
+                 batched: bool = True,
+                 reqlog: bool = True):
         self.models = models
         self.configs = config_by_name
         self.workloads = workloads
@@ -340,7 +378,10 @@ class Simulator:
         self._by_pool: Dict[Tuple[str, str], List[SimInstance]] = {}
         self.tokens: Dict[str, TokenRuns] = {m: TokenRuns() for m in models}
         self.obs: Dict[str, ModelObs] = {m: ModelObs() for m in models}
-        self.prefill_lat: Dict[str, List[float]] = {m: [] for m in models}
+        # per-request lifecycle records (observation-only; on by
+        # default, the sim_loop bench gates its overhead below 5%)
+        self.reqlog: Optional[RequestLog] = \
+            RequestLog(models) if reqlog else None
         self.finished: List[Request] = []
         self.dropped: int = 0
         self.shed_policy: Optional[ShedPolicy] = None
@@ -605,6 +646,8 @@ class Simulator:
                 and self._should_shed(req.model):
             self.shed += 1
             self.shed_by_model[req.model] += 1
+            if self.reqlog is not None:
+                self.reqlog.note_shed(req)
             return
         inst = self.route(req.model, "prefill")
         if inst is None:
@@ -617,6 +660,8 @@ class Simulator:
                 self.dropped += 1
                 self.dropped_by_model[req.model] = \
                     self.dropped_by_model.get(req.model, 0) + 1
+                if self.reqlog is not None:
+                    self.reqlog.note_dropped(req)
             else:
                 self.ev.push(t, self._on_arrival, req)
             return
@@ -687,9 +732,12 @@ class Simulator:
             # probe fires and kill_instance re-routes them.
             inst.queue.extendleft(reversed(batch))
             return
+        rl = self.reqlog
         for r in batch:
             r.prefill_done = self.now
-            self.prefill_lat[r.model].append(self.now - r.arrival)
+            if rl is not None:
+                # first token lands at prefill completion (TTFT)
+                rl.note_first(r.model, r.rid, r.arrival, self.now)
             # KV transfer to a decode instance
             dst = self.route(r.model, "decode")
             delay = inst.cm.kv_transfer_time(r.prompt_len)
@@ -699,6 +747,8 @@ class Simulator:
                     self.dropped += 1
                     self.dropped_by_model[r.model] = \
                         self.dropped_by_model.get(r.model, 0) + 1
+                    if rl is not None:
+                        rl.note_dropped(r)
                 else:           # decode pool still initializing: hold
                     self.ev.push(max(t, self.now + delay),
                                  self._dispatch_decode, r)
@@ -911,11 +961,16 @@ class Simulator:
         finish iteration ``f``."""
         i = bisect_right(inst.res_keys, cut)
         if i:
+            rl = self.reqlog
+            fin = None if rl is None \
+                else rl.finished_sink(inst.model.name)
             for f, req, j_it, j_ok in inst.resident[:i]:
                 req.finish = finish_at(f)
                 req.decode_tokens_ok += f - j_it
                 req.decode_slo_ok += ok_at(f) - j_ok
                 self.finished.append(req)
+                if fin is not None:
+                    fin.append(req)
             del inst.resident[:i]
             del inst.res_keys[:i]
 
@@ -974,6 +1029,8 @@ class Simulator:
             self.dropped += 1
             self.dropped_by_model[req.model] = \
                 self.dropped_by_model.get(req.model, 0) + 1
+            if self.reqlog is not None:
+                self.reqlog.note_dropped(req)
         else:
             self.ev.push(t, self._dispatch_decode, req)
 

@@ -1,0 +1,237 @@
+"""Observability-layer tests: shared percentile semantics, RequestLog
+bit-identity across the batched/oracle loops, conservation against the
+simulator's own counters under faults and shedding, SLOReport shape
+invariants, and the TraceLog emit/validate/write/read round trip with
+its causal-ordering audit."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# tools/ lives at the repo root, outside src/ (same bootstrap as
+# tests/test_corallint.py)
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from repro.core.hardware import make_node_configs
+from repro.core.modelspec import PAPER_MODELS
+from repro.core.templates import generate_templates
+from repro.obs import (QS, RequestLog, SLOReport, SLOTargets, TraceError,
+                       TraceLog, percentile, percentiles,
+                       weighted_percentiles)
+from repro.simulator.sim import INIT_DELAY_S, ShedPolicy, Simulator
+from repro.traces.workloads import gen_requests, workload_stats
+from tools.trace_tools import assert_causal, read_trace, summarize
+
+MODEL = PAPER_MODELS["phi4-14b"]
+WL = workload_stats(MODEL.trace)
+CONFIGS = make_node_configs(["L40S", "L4"], sizes=(1, 2))
+CFG_BY_NAME = {c.name: c for c in CONFIGS}
+
+PRE, _ = generate_templates(MODEL, "prefill", CONFIGS, WL, n_max=2, rho=8.0)
+DEC, _ = generate_templates(MODEL, "decode", CONFIGS, WL, n_max=2, rho=8.0)
+PRE.sort(key=lambda t: -t.throughput)
+DEC.sort(key=lambda t: -t.throughput)
+
+
+# ------------------------------------------------------------ percentiles
+def test_percentile_nearest_rank_and_monotone():
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 7, 100, 1001):
+        xs = rng.exponential(2.0, n)
+        qs = np.linspace(0.0, 1.0, 21)
+        vals = percentiles(xs, qs)
+        srt = np.sort(xs)
+        for q, v in zip(qs, vals):
+            assert v == srt[int(round(q * (n - 1)))]
+        # monotone in q (nearest-rank on a sorted array)
+        assert all(a <= b for a, b in zip(vals, vals[1:]))
+    assert percentile([], 0.5) == 0.0
+    assert percentiles((), QS) == (0.0, 0.0, 0.0)
+
+
+def test_weighted_percentiles_match_repeat_expansion():
+    rng = np.random.default_rng(4)
+    for n in (1, 5, 60):
+        vals = rng.exponential(0.05, n)
+        wts = rng.integers(1, 9, n).astype(np.int64)
+        qs = (0.1, 0.5, 0.9, 0.95, 0.99)
+        got = weighted_percentiles(vals, wts, qs)
+        want = percentiles(np.repeat(vals, wts), qs)
+        assert got == want      # exact nearest-rank, not approximate
+    assert weighted_percentiles(np.zeros(0), np.zeros(0, np.int64),
+                                QS) == (0.0, 0.0, 0.0)
+
+
+# ------------------------------------------------------------- gauntlet
+def _gauntlet(batched, reqlog=True):
+    """Same shape as test_sim's equivalence gauntlet: cold start, kills
+    mid-flight (decode and prefill), drain, scale-up, long horizons —
+    now with the RequestLog's records under test."""
+    sim = Simulator({MODEL.name: MODEL}, CFG_BY_NAME, {MODEL.name: WL},
+                    batched=batched, reqlog=reqlog)
+    sim.add_instance("r0", PRE[0], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", DEC[0], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", DEC[1], ready_delay=INIT_DELAY_S)
+    sim.add_instance("r0", PRE[1], ready_delay=INIT_DELAY_S)
+    reqs = gen_requests(MODEL.name, MODEL.trace, 3.0, 300, seed=7)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(120.0)
+    sim.kill_instance(sim.instances[1])
+    sim.run_until(200.0)
+    sim.kill_instance(sim.instances[0])
+    sim.run_until(240.0)
+    sim.drain_instance(sim.instances[2])
+    sim.add_instance("r0", DEC[0])
+    for t in (360.0, 480.0, 3600.0):
+        sim.run_until(t)
+    return sim, reqs
+
+
+def test_gauntlet_bit_identical_with_reqlog_on():
+    """Instrumentation is observation-only: with the RequestLog on
+    (the default), batched and oracle agree bit-for-bit on outcomes
+    AND on every latency record."""
+    s1, r1 = _gauntlet(batched=False)
+    s2, r2 = _gauntlet(batched=True)
+    m = MODEL.name
+    assert s1.dropped == s2.dropped
+    assert {r.rid for r in s1.finished} == {r.rid for r in s2.finished}
+    # identical record tables, not just identical aggregates
+    assert s1.reqlog.first_records(m) == s2.reqlog.first_records(m)
+    assert s1.reqlog.terminal_records(m) == s2.reqlog.terminal_records(m)
+    # and identical SLO summaries derived from them
+    rep1 = SLOReport(s1.reqlog, s1.tokens,
+                     SLOTargets.from_models({m: MODEL}))
+    rep2 = SLOReport(s2.reqlog, s2.tokens,
+                     SLOTargets.from_models({m: MODEL}))
+    for t0 in range(0, 3600, 600):
+        assert rep1.model_window(m, t0, t0 + 600) == \
+            rep2.model_window(m, t0, t0 + 600)
+
+
+def test_reqlog_off_changes_nothing():
+    """Turning logging off must not move a single outcome (the log
+    never feeds back into simulation decisions)."""
+    s_on, r_on = _gauntlet(batched=True, reqlog=True)
+    s_off, r_off = _gauntlet(batched=True, reqlog=False)
+    assert s_off.reqlog is None
+    assert s_on.dropped == s_off.dropped
+    fin = {r.rid for r in s_on.finished}
+    assert fin == {r.rid for r in s_off.finished}
+    d_on = {r.rid: (r.finish, r.prefill_done, r.decode_tokens_ok)
+            for r in r_on if r.rid in fin}
+    d_off = {r.rid: (r.finish, r.prefill_done, r.decode_tokens_ok)
+             for r in r_off if r.rid in fin}
+    assert d_on == d_off
+
+
+def test_reqlog_conservation_under_faults_and_shed():
+    """RequestLog counters match the simulator's own accounting when
+    requests are shed, dropped, and killed mid-flight."""
+    m = MODEL.name
+    sim = Simulator({m: MODEL}, CFG_BY_NAME, {m: WL}, batched=True)
+    sim.shed_policy = ShedPolicy(max_queue_per_instance=4.0)
+    sim.add_instance("r0", PRE[0], ready_delay=0.0)
+    sim.add_instance("r0", DEC[0], ready_delay=0.0)
+    reqs = gen_requests(m, MODEL.trace, 30.0, 120, seed=12)
+    for r in reqs:
+        sim.submit(r)
+    sim.run_until(90.0)
+    sim.kill_instance(sim.instances[1])     # lone decode pool dies
+    sim.run_until(7200.0)
+    rl = sim.reqlog
+    assert rl.n_finished[m] == len([r for r in sim.finished
+                                    if r.model == m])
+    assert rl.n_dropped[m] == sim.dropped_by_model.get(m, 0)
+    assert rl.n_shed[m] == sim.shed_by_model.get(m, 0)
+    assert rl.n_shed[m] > 0                 # the shed path actually ran
+    # every submitted request reached exactly one terminal state
+    rows = rl.terminal_records(m)
+    assert len(rows) == rl.n_finished[m] + rl.n_dropped[m] + rl.n_shed[m]
+    assert {r[0] for r in rows} <= {r.rid for r in reqs}
+    # finished requests may exceed output_len via the kill's partial
+    # token credit, so only sanity-bound the counters
+    for rid, status, arr, first, finish, out, tok, ok in rows:
+        if status == 0:                     # FINISHED
+            assert finish >= first >= arr
+            assert tok >= 0 and ok >= 0
+        else:                               # DROPPED / SHED
+            assert (first, finish, out, tok, ok) == (-1.0, -1.0, 0, 0, 0)
+
+
+def test_slo_report_shape_invariants():
+    """Percentiles are monotone across QS, attainments are fractions,
+    and windowed series sample counts sum to the whole-run counts."""
+    sim, _ = _gauntlet(batched=True)
+    m = MODEL.name
+    rep = SLOReport(sim.reqlog, sim.tokens,
+                    SLOTargets.from_models({m: MODEL}))
+    whole = rep.model_window(m, 0.0, 3600.0)
+    assert whole["n_ttft"] > 0 and whole["n_tbt_tokens"] > 0
+    for d in rep.series(m, 600.0, 0.0, 3600.0) + [whole]:
+        assert d["ttft_p50"] <= d["ttft_p95"] <= d["ttft_p99"]
+        assert d["tbt_p50"] <= d["tbt_p95"] <= d["tbt_p99"]
+        assert 0.0 <= d["ttft_attain"] <= 1.0
+        assert 0.0 <= d["tbt_attain"] <= 1.0
+    series = rep.series(m, 600.0, 0.0, 3600.0)
+    assert sum(d["n_ttft"] for d in series) == whole["n_ttft"]
+    assert sum(d["n_tbt_tokens"] for d in series) == whole["n_tbt_tokens"]
+
+
+# --------------------------------------------------------------- tracing
+def test_tracelog_roundtrip_and_validation(tmp_path):
+    tr = TraceLog()
+    tr.emit("fault_inject", 130.0, 0, fault="crash", iid=3)
+    tr.emit("trigger", 0.0, 0, resolve=True, reason="epoch")
+    tr.emit("solve", 0.1, 0, path="decomposed", solve_ms=12.0,
+            assembly_ms=1.0, extract_ms=0.5, total_ms=14.0,
+            alloc_source="fresh")
+    tr.emit("reconcile", 0.2, 0, n_new=4, n_drained=0, n_kept=0)
+    tr.emit("fault_detect", 145.0, 0, iid=3, detect_lag_s=15.0)
+    tr.emit("restart", 146.0, 0, for_iid=3, outcome="started")
+    tr.emit("preempt", 200.0, 0, iid=5)
+    tr.emit("mid_resolve", 201.0, 0, reason="availability_event",
+            solve_ms=9.0)
+    path = tmp_path / "trace.jsonl"
+    assert tr.write(path) == 8
+    records = read_trace(str(path))         # full-schema validation
+    assert [r["kind"] for r in records] == \
+        [r["kind"] for r in tr.records]
+    assert assert_causal(records) == []
+    summ = summarize(records)
+    assert summ["n_records"] == 8
+    assert summ["faults"] == {"crash": 1}
+    assert summ["trigger_reasons"] == {"epoch": 1}
+
+    with pytest.raises(TraceError):
+        tr.emit("no_such_kind", 0.0, 0)
+    with pytest.raises(TraceError):
+        tr.emit("solve", 0.0, 0, path="decomposed")  # missing fields
+
+
+def test_trace_causal_audit_flags_violations():
+    tr = TraceLog()
+    # detect with no inject at all, and a restart whose only detect
+    # comes later in *time* (record order is irrelevant either way)
+    tr.emit("fault_detect", 50.0, 0, iid=9, detect_lag_s=15.0)
+    tr.emit("fault_inject", 100.0, 0, fault="crash", iid=7)
+    tr.emit("fault_detect", 400.0, 1, iid=7, detect_lag_s=15.0)
+    tr.emit("restart", 300.0, 1, for_iid=7, outcome="started")
+    errs = assert_causal(tr.records)
+    assert len(errs) == 2
+    assert any("iid=9" in e and "fault_inject" in e for e in errs)
+    assert any("iid=7" in e and "fault_detect" in e for e in errs)
+    # planned-future inject legitimately precedes in file, follows in t
+    tr2 = TraceLog()
+    tr2.emit("fault_inject", 130.0, 0, fault="crash", iid=3)
+    tr2.emit("fault_detect", 145.0, 0, iid=3, detect_lag_s=15.0)
+    assert assert_causal(tr2.records) == []
+    # epoch-edge records must be epoch-ordered in record order
+    tr3 = TraceLog()
+    tr3.emit("trigger", 240.0, 1, resolve=True, reason="epoch")
+    tr3.emit("trigger", 0.0, 0, resolve=True, reason="epoch")
+    errs3 = assert_causal(tr3.records)
+    assert len(errs3) == 1 and "epoch" in errs3[0]

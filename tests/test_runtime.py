@@ -77,8 +77,8 @@ def test_failure_does_not_double_count_prefill(phi4_runtime_library):
     rt, res, reqs = _run(phi4_runtime_library, fail_rate=1.0, n_epochs=4)
     sim = rt.sim
     n_prefilled = len([r for r in reqs if r.prefill_done >= 0])
-    # exactly one prefill latency record per request that prefilled
-    assert len(sim.prefill_lat[MODEL.name]) == n_prefilled
+    # exactly one first-token record per request that prefilled
+    assert sim.reqlog.n_first[MODEL.name] == n_prefilled
     seen = {r.rid for r in sim.finished}
     assert len(seen) == len(sim.finished), "no request finishes twice"
 

@@ -181,7 +181,7 @@ def test_failure_reroutes_decode_queue_without_prefill():
     sim.kill_instance(victims[0])
     sim.run_until(7200.0)
     n_prefilled = len([r for r in reqs if r.prefill_done >= 0])
-    assert len(sim.prefill_lat[MODEL.name]) == n_prefilled
+    assert sim.reqlog.n_first[MODEL.name] == n_prefilled
     assert {r.rid for r in sim.finished} == {r.rid for r in reqs}
     assert sim.dropped == 0
 
@@ -296,7 +296,7 @@ def test_kill_prefill_with_admission_queue():
     s1, s2, reqs = _assert_kill_equiv(40.0, 0, rate=30.0, seed=12)
     for s in (s1, s2):
         n_prefilled = len([r for r in reqs if r.prefill_done >= 0])
-        assert len(s.prefill_lat[MODEL.name]) == n_prefilled
+        assert s.reqlog.n_first[MODEL.name] == n_prefilled
         assert {r.rid for r in s.finished} == {r.rid for r in reqs}
 
 

@@ -38,6 +38,12 @@ echo "== sanitize smoke (CORAL_SANITIZE=1, batched vs oracle) =="
 # asserting the span-batched loop stays bit-identical to the oracle
 CORAL_SANITIZE=1 python tools/sanitize_smoke.py
 
+echo "== trace smoke (crash_storm, schema + causal ordering) =="
+# short crash_storm with TraceLog attached: validates every JSONL
+# record against TRACE_SCHEMA, audits causal ordering (inject ->
+# detect -> restart) and cross-checks trace counts vs EpochMetrics
+python tools/trace_smoke.py
+
 echo "== decompose smoke (three-tier ladder vs monolithic, both backends) =="
 # core-scale auto-vs-monolithic objective parity on scipy/HiGHS plus a
 # var-capped instance on the pure-numpy branch-and-bound backend

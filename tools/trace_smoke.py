@@ -1,0 +1,124 @@
+"""Trace smoke: run a short crash_storm with the control-plane
+``TraceLog`` attached, write ``artifacts/trace_smoke_crash_storm.jsonl``
+and audit it end to end:
+
+  1. every record round-trips through the JSONL reader and passes the
+     full TRACE_SCHEMA validation;
+  2. the causal-ordering audit is clean (detect after inject, restart
+     after detect, epoch-edge records in non-decreasing epoch order);
+  3. trace counts agree with the runtime's own metrics (solve spans ==
+     resolves, detects == failures, preempts == preemptions, ...);
+  4. every epoch's ``EpochMetrics.slo`` block carries the per-model
+     TTFT/TBT summary fields.
+
+Run from repo root:  PYTHONPATH=src python tools/trace_smoke.py
+Wired into tools/ci.sh as the trace-schema leg.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.common import cached_library, scenario  # noqa: E402
+from repro.control import (FaultInjector, RestartPolicy,  # noqa: E402
+                           make_scenario)
+from repro.obs import TraceLog  # noqa: E402
+from repro.core.allocator import AllocatorState  # noqa: E402
+from repro.runtime.cluster import ClusterRuntime  # noqa: E402
+from repro.simulator.sim import ShedPolicy  # noqa: E402
+from tools.trace_tools import (assert_causal, read_trace,  # noqa: E402
+                               summarize)
+
+N_EPOCHS = 8
+EPOCH_S = 240.0
+BASE_RATE = 2.0
+SEED = 2
+
+_SLO_KEYS = ("ttft_p50", "ttft_p95", "ttft_p99", "tbt_p50", "tbt_p95",
+             "tbt_p99", "ttft_attain", "tbt_attain")
+
+
+def main() -> int:
+    t_start = time.time()
+    models, configs, regions, wls = scenario(extended=False)
+    lib = cached_library("core", models, configs, wls)
+    sc = make_scenario("crash_storm", models, regions, configs, wls,
+                       n_epochs=N_EPOCHS, epoch_s=EPOCH_S,
+                       base_rate=BASE_RATE, seed=SEED)
+    assert sc.faults is not None
+    trace = TraceLog()
+    rt = ClusterRuntime(
+        models, regions, configs, lib, AllocatorState(), wls,
+        epoch_s=sc.epoch_s, sim_batched=True,
+        spot_market=sc.spot_market, shed_policy=ShedPolicy(),
+        health_check_s=15.0,
+        restart_policy=RestartPolicy(backoff_base_s=20.0,
+                                     budget_per_epoch=4),
+        trace=trace)
+    res = rt.run(sc.requests, sc.availability, sc.truth_demands,
+                 fault_injector=FaultInjector(sc.faults))
+
+    out_dir = os.path.join(_ROOT, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "trace_smoke_crash_storm.jsonl")
+    n_written = trace.write(path)
+
+    # 1. read back through the schema-validating reader
+    records = read_trace(path)
+    assert len(records) == n_written, \
+        f"round-trip lost records: wrote {n_written}, read {len(records)}"
+    summ = summarize(records)
+    for kind in ("trigger", "solve", "reconcile", "fault_inject",
+                 "fault_detect", "restart"):
+        assert summ["kinds"].get(kind, 0) > 0, \
+            f"expected at least one {kind!r} record, got none"
+
+    # 2. causal ordering
+    violations = assert_causal(records)
+    assert not violations, "causal violations:\n" + "\n".join(violations)
+
+    # 3. trace counts agree with the runtime's own metrics
+    n_solves = sum(1 for e in res.epochs if e.resolve_triggered)
+    n_failed = sum(e.n_failed for e in res.epochs)
+    n_preempt = sum(e.n_preempted for e in res.epochs)
+    n_mid = sum(e.n_mid_resolves for e in res.epochs)
+    n_started = sum(e.n_restarted for e in res.epochs)
+    assert summ["kinds"]["solve"] == n_solves, \
+        (summ["kinds"]["solve"], n_solves)
+    assert summ["kinds"]["fault_detect"] == n_failed, \
+        (summ["kinds"]["fault_detect"], n_failed)
+    assert summ["kinds"].get("preempt", 0) == n_preempt, \
+        (summ["kinds"].get("preempt", 0), n_preempt)
+    assert summ["kinds"].get("mid_resolve", 0) == n_mid, \
+        (summ["kinds"].get("mid_resolve", 0), n_mid)
+    n_rec_started = sum(1 for r in records
+                        if r["kind"] == "restart"
+                        and r["outcome"] == "started")
+    assert n_rec_started == n_started, (n_rec_started, n_started)
+    assert summ["kinds"]["reconcile"] == len(res.epochs), \
+        (summ["kinds"]["reconcile"], len(res.epochs))
+
+    # 4. SLO summaries present on every epoch for every model
+    for e in res.epochs:
+        for name in models:
+            blk = e.slo.get(name)
+            assert blk is not None, f"epoch {e.epoch}: no slo for {name}"
+            for k in _SLO_KEYS:
+                assert k in blk, f"epoch {e.epoch} {name}: missing {k}"
+
+    print(f"[trace_smoke] crash_storm: {n_written} records -> {path}")
+    print(f"[trace_smoke] kinds: {summ['kinds']}")
+    print(f"[trace_smoke] counts OK (solves={n_solves} detects={n_failed}"
+          f" preempts={n_preempt} mid={n_mid} restarts={n_started}),"
+          f" 0 causal violations, SLO blocks present"
+          f" ({time.time() - t_start:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

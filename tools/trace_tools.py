@@ -1,0 +1,185 @@
+"""Schema-validating reader for Coral control-plane traces
+(``artifacts/trace_*.jsonl``, written by ``repro.obs.TraceLog``).
+
+Library API: ``read_trace`` (parse + full-schema validation),
+``summarize`` (per-kind counts, solve breakdown, trigger reasons,
+fault tally), ``diff`` (two traces' summaries side by side) and
+``assert_causal`` — the causal-ordering audit:
+
+* every ``fault_detect`` names an instance with a prior (by ``t``)
+  ``fault_inject``;
+* every ``restart`` follows (by ``t``) a ``fault_detect`` for the
+  instance it replaces;
+* ``trigger`` / ``solve`` / ``reconcile`` records appear in
+  non-decreasing epoch order.
+
+Ordering is judged on the ``t`` *fields*, never on record position:
+``fault_inject`` records are emitted when the injector plans an epoch,
+so they legitimately appear in the file before records with smaller
+timestamps.
+
+CLI:
+    PYTHONPATH=src python tools/trace_tools.py summarize FILE
+    PYTHONPATH=src python tools/trace_tools.py validate  FILE
+    PYTHONPATH=src python tools/trace_tools.py causal    FILE
+    PYTHONPATH=src python tools/trace_tools.py diff      FILE_A FILE_B
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs.trace import TraceError, validate_record  # noqa: E402
+
+# epoch order must be non-decreasing in *record order* for the
+# epoch-edge kinds (planned-future kinds like fault_inject are exempt)
+_EPOCH_ORDERED = ("trigger", "solve", "reconcile")
+
+
+def read_trace(path: str) -> List[dict]:
+    """Parse a JSONL trace, validating every record against
+    TRACE_SCHEMA; raises ``TraceError`` on the first bad record."""
+    records = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise TraceError(f"{path}:{ln}: not JSON ({e})")
+            err = validate_record(rec)
+            if err is not None:
+                raise TraceError(f"{path}:{ln}: {err}")
+            records.append(rec)
+    return records
+
+
+def summarize(records: List[dict]) -> Dict:
+    """Compact rollup of one trace: per-kind counts, epoch span,
+    solve-path/trigger-reason/fault-class tallies, restart outcomes,
+    and total/mean solve milliseconds."""
+    kinds: Dict[str, int] = {}
+    reasons: Dict[str, int] = {}
+    paths: Dict[str, int] = {}
+    faults: Dict[str, int] = {}
+    outcomes: Dict[str, int] = {}
+    solve_ms: List[float] = []
+    epochs = set()
+    for r in records:
+        kinds[r["kind"]] = kinds.get(r["kind"], 0) + 1
+        epochs.add(r["epoch"])
+        if r["kind"] == "trigger":
+            reasons[r["reason"]] = reasons.get(r["reason"], 0) + 1
+        elif r["kind"] == "solve":
+            paths[r["path"]] = paths.get(r["path"], 0) + 1
+            solve_ms.append(float(r["solve_ms"]))
+        elif r["kind"] == "fault_inject":
+            faults[r["fault"]] = faults.get(r["fault"], 0) + 1
+        elif r["kind"] == "restart":
+            outcomes[r["outcome"]] = outcomes.get(r["outcome"], 0) + 1
+    return {
+        "n_records": len(records),
+        "kinds": dict(sorted(kinds.items())),
+        "epochs": [min(epochs), max(epochs)] if epochs else [],
+        "trigger_reasons": dict(sorted(reasons.items())),
+        "solve_paths": dict(sorted(paths.items())),
+        "faults": dict(sorted(faults.items())),
+        "restart_outcomes": dict(sorted(outcomes.items())),
+        "solve_ms_total": sum(solve_ms),
+        "solve_ms_mean": sum(solve_ms) / len(solve_ms)
+        if solve_ms else 0.0,
+    }
+
+
+def diff(a: List[dict], b: List[dict]) -> Dict:
+    """Field-by-field comparison of two traces' summaries (count
+    deltas per kind / reason / path / fault class)."""
+    sa, sb = summarize(a), summarize(b)
+    out: Dict = {}
+    for section in ("kinds", "trigger_reasons", "solve_paths", "faults",
+                    "restart_outcomes"):
+        da, db = sa[section], sb[section]
+        delta = {k: db.get(k, 0) - da.get(k, 0)
+                 for k in sorted(set(da) | set(db))
+                 if db.get(k, 0) != da.get(k, 0)}
+        if delta:
+            out[section] = delta
+    out["n_records"] = [sa["n_records"], sb["n_records"]]
+    return out
+
+
+def assert_causal(records: List[dict]) -> List[str]:
+    """Causal-ordering audit; returns violation strings (empty =
+    clean).  Compares ``t`` fields, not record positions."""
+    errs: List[str] = []
+    injects: Dict[int, List[float]] = {}
+    detects: Dict[int, List[float]] = {}
+    for r in records:
+        if r["kind"] == "fault_inject":
+            injects.setdefault(r["iid"], []).append(r["t"])
+        elif r["kind"] == "fault_detect":
+            detects.setdefault(r["iid"], []).append(r["t"])
+    eps = 1e-9
+    for r in records:
+        if r["kind"] == "fault_detect":
+            ts = injects.get(r["iid"], [])
+            if not any(t <= r["t"] + eps for t in ts):
+                errs.append(
+                    f"fault_detect for iid={r['iid']} at t={r['t']:.3f}"
+                    f" has no prior fault_inject")
+        elif r["kind"] == "restart":
+            ts = detects.get(r["for_iid"], [])
+            if not any(t <= r["t"] + eps for t in ts):
+                errs.append(
+                    f"restart for iid={r['for_iid']} at t={r['t']:.3f}"
+                    f" has no prior fault_detect")
+    last_epoch = {k: -1 for k in _EPOCH_ORDERED}
+    for i, r in enumerate(records):
+        k = r["kind"]
+        if k in last_epoch:
+            if r["epoch"] < last_epoch[k]:
+                errs.append(f"record {i}: {k} epoch {r['epoch']} after "
+                            f"epoch {last_epoch[k]}")
+            last_epoch[k] = r["epoch"]
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    cmd, paths = argv[0], argv[1:]
+    if cmd == "diff":
+        if len(paths) != 2:
+            print("diff needs exactly two trace files")
+            return 2
+        print(json.dumps(diff(read_trace(paths[0]),
+                              read_trace(paths[1])), indent=1))
+        return 0
+    records = read_trace(paths[0])
+    if cmd == "validate":
+        print(f"{paths[0]}: {len(records)} records, schema OK")
+        return 0
+    if cmd == "summarize":
+        print(json.dumps(summarize(records), indent=1))
+        return 0
+    if cmd == "causal":
+        errs = assert_causal(records)
+        for e in errs:
+            print(f"VIOLATION: {e}")
+        print(f"{paths[0]}: {len(records)} records, "
+              f"{len(errs)} causal violations")
+        return 1 if errs else 0
+    print(f"unknown command {cmd!r}")
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
